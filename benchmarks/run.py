@@ -1,0 +1,295 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (derived packs the
+figure-specific metrics as ';'-separated key=val pairs).
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only <substr>]
+
+Paper targets (InferCept, ICML 2024):
+  Table 1  — augmentation properties (interception time / count / context)
+  Figure 2 — end-to-end: normalized latency, throughput, TTFT for
+             {vLLM, ImprovedDiscard, Preserve, Swap, InferCept} x load
+  Figure 3 — technique breakdown (+waste fractions)
+  §3.2     — Discard 27% waste / 37-40% recompute time; Preserve ~50% mem
+             held by paused >60% of time; Swap 26% waste
+  §4.4     — dynamic estimator reaches 93% of oracle
+  §5.1     — single-augment workloads (QA, Chatbot) + multi-GPU scaling
+  kernels  — Pallas flash/paged/swap-pack vs refs (interpret-mode checked,
+             XLA-path timed)
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+import time
+
+import numpy as np
+
+
+def _row(name: str, us_per_call: float, derived: dict):
+    d = ";".join(f"{k}={v}" for k, v in derived.items())
+    print(f"{name},{us_per_call:.1f},{d}", flush=True)
+
+
+def _cost(model_name="gpt-j-6b", chip_name="a100", n_chips=1):
+    from repro.configs import get_config
+    from repro.core import CostModel
+    from repro.utils.hw import CHIPS
+    return CostModel(cfg=get_config(model_name), chip=CHIPS[chip_name],
+                     n_chips=n_chips)
+
+
+def bench_table1_workload(quick=False):
+    from repro.serving.workloads import (AUGMENT_SPECS, make_workload,
+                                         workload_table)
+    n = 200 if quick else 1000
+    t0 = time.time()
+    reqs = make_workload(seed=0, n_requests=n, rate_rps=2.0)
+    stats = workload_table(reqs)
+    dt = (time.time() - t0) / n * 1e6
+    for kind, s in sorted(stats.items()):
+        spec = AUGMENT_SPECS[kind]
+        _row(f"table1_{kind}", dt, {
+            "int_time_mean_s": round(s["int_time_mean"], 5),
+            "paper_mean_s": spec.int_time[0],
+            "n_int_mean": round(s["n_int_mean"], 2),
+            "paper_n_int": spec.n_int[0],
+            "ctx_mean": round(s["ctx_mean"], 0),
+            "paper_ctx": spec.ctx_len[0],
+        })
+
+
+def _run_policies(policies, reqs, cost, profiles=None):
+    from repro.sim import simulate
+    out = {}
+    for name, pol in policies.items():
+        t0 = time.time()
+        r = simulate(copy.deepcopy(reqs), pol, cost, profiles=profiles)
+        out[name] = (r, time.time() - t0)
+    return out
+
+
+def bench_fig2_end2end(quick=False, model="gpt-j-6b", n_chips=1):
+    from repro.core import POLICIES
+    from repro.serving.workloads import make_workload
+    cost = _cost(model, n_chips=n_chips)
+    rates = [1.0, 2.0] if quick else [1.0, 2.0, 3.0, 4.0]
+    n = 80 if quick else 200
+    pols = {k: POLICIES[k] for k in
+            ["vllm", "improved_discard", "preserve", "swap", "infercept"]}
+    for rate in rates:
+        reqs = make_workload(seed=1, n_requests=n, rate_rps=rate)
+        res = _run_policies(pols, reqs, cost)
+        base = res["vllm"][0]
+        for name, (r, wall) in res.items():
+            s = r.summary()
+            _row(f"fig2_{model.replace('-', '_')}_rate{rate}_{name}",
+                 wall / max(1, r.iterations) * 1e6, {
+                     "norm_lat_p50": s["norm_latency_p50_s_per_tok"],
+                     "tput_rps": s["throughput_rps"],
+                     "ttft_p50": s["ttft_p50_s"],
+                     "waste_frac": s["waste_fraction"],
+                     "speedup_vs_vllm": round(
+                         base.normalized_latency()
+                         / max(1e-9, r.normalized_latency()), 2),
+                 })
+
+
+def bench_fig3_breakdown(quick=False):
+    from repro.core import BREAKDOWN
+    from repro.serving.workloads import make_workload
+    cost = _cost()
+    n = 80 if quick else 200
+    reqs = make_workload(seed=2, n_requests=n, rate_rps=2.0)
+    res = _run_policies({p.name: p for p in BREAKDOWN}, reqs, cost)
+    prev = None
+    for p in BREAKDOWN:
+        r, wall = res[p.name]
+        lat = r.normalized_latency()
+        improv = 0.0 if prev is None else round((prev - lat) / prev * 100, 1)
+        prev = lat
+        _row(f"fig3_{p.name}", wall / max(1, r.iterations) * 1e6, {
+            "norm_lat_p50": round(lat, 5),
+            "improvement_pct_over_prev": improv,
+            "waste_frac": round(r.waste_fraction(), 4),
+        })
+
+
+def bench_waste_s32(quick=False):
+    """§3.2 waste characterization of the three primitive strategies."""
+    from repro.core import POLICIES
+    from repro.serving.workloads import make_workload
+    # the paper's Fig.3 load point (2 rps, 6B model); waste fractions are
+    # load-sensitive and grow toward saturation, so the load must match
+    cost = _cost()
+    n = 100 if quick else 150
+    reqs = make_workload(seed=3, n_requests=n, rate_rps=2.0)
+    res = _run_policies({k: POLICIES[k] for k in
+                         ["vllm", "preserve", "swap", "infercept"]},
+                        reqs, cost)
+    paper = {"vllm": {"waste": 0.27, "recompute_time": 0.385},
+             "preserve": {"waste": 0.30, "recompute_time": 0.0},
+             "swap": {"waste": 0.26, "recompute_time": 0.0},
+             "infercept": {"waste": 0.0069, "recompute_time": 0.0}}
+    for name, (r, wall) in res.items():
+        _row(f"s32_waste_{name}", wall / max(1, r.iterations) * 1e6, {
+            "waste_frac": round(r.waste_fraction(), 4),
+            "paper_waste": paper[name]["waste"],
+            "recompute_time_frac": round(r.recompute_time_fraction(), 4),
+            "stall_time_s": round(r.stall_time, 2),
+        })
+
+
+def bench_estimator(quick=False):
+    """§4.4: dynamic estimation vs oracle (paper: 93%)."""
+    from repro.core import POLICIES
+    from repro.serving.workloads import make_workload, profile_means
+    cost = _cost()
+    n = 100 if quick else 200
+    reqs = make_workload(seed=4, n_requests=n, rate_rps=3.0)
+    res = _run_policies(
+        {"dynamic": POLICIES["infercept"],
+         "oracle": POLICIES["infercept_oracle"]},
+        reqs, cost, profiles=profile_means())
+    dyn = res["dynamic"][0]
+    orc = res["oracle"][0]
+    ratio = orc.normalized_latency() / max(1e-9, dyn.normalized_latency())
+    _row("s44_estimator", res["dynamic"][1] * 1e6 / max(1, dyn.iterations), {
+        "dynamic_norm_lat": round(dyn.normalized_latency(), 5),
+        "oracle_norm_lat": round(orc.normalized_latency(), 5),
+        "dynamic_vs_oracle": round(ratio, 3),
+        "paper_claim": 0.93,
+    })
+
+
+def bench_single_augment(quick=False):
+    from repro.core import POLICIES
+    from repro.serving.workloads import make_workload
+    cost = _cost()
+    n = 60 if quick else 150
+    for kind, rate in [("qa", 3.0), ("chatbot", 2.0)]:
+        reqs = make_workload(seed=5, n_requests=n, rate_rps=rate,
+                             kinds=(kind,))
+        res = _run_policies({k: POLICIES[k] for k in ["vllm", "infercept"]},
+                            reqs, cost)
+        sp = (res["vllm"][0].normalized_latency()
+              / max(1e-9, res["infercept"][0].normalized_latency()))
+        _row(f"s51_single_{kind}", res["infercept"][1] * 1e6, {
+            "infercept_norm_lat":
+                round(res["infercept"][0].normalized_latency(), 5),
+            "vllm_norm_lat": round(res["vllm"][0].normalized_latency(), 5),
+            "speedup": round(sp, 2),
+        })
+
+
+def bench_kernels(quick=False):
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ref
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.paged_attention import paged_attention
+    from repro.kernels.swap_pack import swap_pack
+
+    key = jax.random.PRNGKey(0)
+
+    def timed(fn, *args, n=3):
+        fn(*args)  # compile
+        t0 = time.time()
+        for _ in range(n):
+            jax.block_until_ready(fn(*args))
+        return (time.time() - t0) / n * 1e6
+
+    # flash attention (XLA-ref timing + interpret-mode check)
+    B, Hkv, G, T, hd = 1, 2, 2, 256, 64
+    q = jax.random.normal(key, (B, Hkv, G, T, hd), jnp.float32)
+    k = jax.random.normal(key, (B, Hkv, T, hd), jnp.float32)
+    v = jax.random.normal(key, (B, Hkv, T, hd), jnp.float32)
+    us_ref = timed(jax.jit(lambda a, b, c: ref.flash_attention_ref(a, b, c)),
+                   q, k, v)
+    out = flash_attention(q, k, v, bq=64, bk=64, interpret=True)
+    err = float(jnp.max(jnp.abs(out - ref.flash_attention_ref(q, k, v))))
+    _row("kernel_flash_attention", us_ref,
+         {"interpret_max_err": f"{err:.2e}",
+          "shape": f"B{B}xHkv{Hkv}xG{G}xT{T}xhd{hd}"})
+
+    # paged attention
+    rng = np.random.default_rng(0)
+    q2 = jax.random.normal(key, (4, 2, 4, 64), jnp.float32)
+    kp = jax.random.normal(key, (64, 16, 2, 64), jnp.float32)
+    vp = jax.random.normal(key, (64, 16, 2, 64), jnp.float32)
+    bt = jnp.asarray(rng.integers(0, 64, (4, 8)), jnp.int32)
+    lens = jnp.asarray([100, 30, 128, 64], jnp.int32)
+    us_ref = timed(jax.jit(lambda *a: ref.paged_attention_ref(*a)),
+                   q2, kp, vp, bt, lens)
+    out = paged_attention(q2, kp, vp, bt, lens, interpret=True)
+    err = float(jnp.max(jnp.abs(out - ref.paged_attention_ref(
+        q2, kp, vp, bt, lens))))
+    _row("kernel_paged_attention", us_ref,
+         {"interpret_max_err": f"{err:.2e}", "pages": 64, "page": 16})
+
+    # chunked GLA scan (mamba2 / mLSTM SSD core)
+    from repro.kernels.gla_scan import gla_scan
+    from repro.models.ssm import chunked_gla
+    qg = jax.random.normal(key, (2, 2, 256, 64))
+    vg = jax.random.normal(key, (2, 2, 256, 64))
+    lag = -jnp.abs(jax.random.normal(key, (2, 2, 256))) * 0.2
+    us_ref = timed(jax.jit(lambda a, b, c, d: chunked_gla(a, b, c, d, 128)),
+                   qg, qg, vg, lag)
+    yk, _ = gla_scan(qg, qg, vg, lag, chunk=128, interpret=True)
+    yr, _ = chunked_gla(qg, qg, vg, lag, 128)
+    err = float(jnp.max(jnp.abs(yk - yr)))
+    _row("kernel_gla_scan", us_ref,
+         {"interpret_max_err": f"{err:.2e}", "chunk": 128, "T": 256})
+
+    # swap pack
+    pool = jax.random.normal(key, (64, 16, 2, 64), jnp.bfloat16)
+    ids = jnp.asarray(rng.choice(64, 16, replace=False), jnp.int32)
+    us_ref = timed(jax.jit(lambda *a: ref.swap_pack_ref(*a)), pool, ids)
+    out = swap_pack(pool, ids, interpret=True)
+    ok = bool(jnp.array_equal(out, ref.swap_pack_ref(pool, ids)))
+    _row("kernel_swap_pack", us_ref, {"exact_match": ok, "pages_moved": 16})
+
+
+def bench_multi_gpu_scaling(quick=False):
+    """13B on 1 vs 2 GPUs, 70B on 4 (paper §5.1: distributed setting gains
+    grow because more HBM per GPU is left for KV)."""
+    from repro.core import POLICIES
+    from repro.serving.workloads import make_workload
+    combos = [("vicuna-13b", 1), ("vicuna-13b", 2)]
+    if not quick:
+        combos.append(("llama3-70b", 4))
+    n = 60 if quick else 120
+    for model, chips in combos:
+        cost = _cost(model, n_chips=chips)
+        reqs = make_workload(seed=6, n_requests=n, rate_rps=1.5,
+                             max_ctx=4096)
+        res = _run_policies({k: POLICIES[k] for k in ["vllm", "infercept"]},
+                            reqs, cost)
+        sp = (res["vllm"][0].normalized_latency()
+              / max(1e-9, res["infercept"][0].normalized_latency()))
+        _row(f"s51_{model.replace('-', '_')}_x{chips}",
+             res["infercept"][1] * 1e6, {
+                 "kv_capacity_tokens": cost.kv_capacity_tokens(),
+                 "speedup_vs_vllm": round(sp, 2),
+             })
+
+
+ALL = [bench_table1_workload, bench_fig2_end2end, bench_fig3_breakdown,
+       bench_waste_s32, bench_estimator, bench_single_augment,
+       bench_kernels, bench_multi_gpu_scaling]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for fn in ALL:
+        if args.only and args.only not in fn.__name__:
+            continue
+        fn(quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Reproduce the paper's Figure 2 sweep in the discrete-event simulator:
+5 policies x request rates on the mixed 6-augmentation workload, GPT-J-6B
+on one A100 (the paper's smallest setting).
+
+    PYTHONPATH=src python examples/policy_comparison.py [--rates 1 2 3 4]
+"""
+import argparse
+import copy
+
+from repro.configs import get_config
+from repro.core import CostModel, POLICIES
+from repro.serving.workloads import make_workload
+from repro.sim import simulate
+from repro.utils.hw import A100
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rates", type=float, nargs="+",
+                    default=[1.0, 2.0, 3.0, 4.0])
+    ap.add_argument("--requests", type=int, default=150)
+    ap.add_argument("--model", default="gpt-j-6b")
+    args = ap.parse_args()
+
+    cost = CostModel(cfg=get_config(args.model), chip=A100, n_chips=1)
+    print(f"model={args.model} M={cost.m_bytes/1024:.0f} KiB/token "
+          f"S={cost.saturation_tokens} "
+          f"KV capacity={cost.kv_capacity_tokens()} tokens\n")
+
+    names = ["vllm", "improved_discard", "preserve", "swap", "infercept"]
+    print(f"{'rate':>5s} " + " ".join(f"{n:>17s}" for n in names)
+          + "   (median normalized latency, s/token; waste fraction)")
+    for rate in args.rates:
+        reqs = make_workload(seed=1, n_requests=args.requests, rate_rps=rate)
+        row = [f"{rate:5.1f}"]
+        for name in names:
+            r = simulate(copy.deepcopy(reqs), POLICIES[name], cost)
+            row.append(f"{r.normalized_latency():8.4f}/{r.waste_fraction():.3f}")
+        print(" ".join(f"{c:>17s}" for c in row))
+
+    # headline: sustained-load improvement at matched latency
+    reqs = make_workload(seed=1, n_requests=args.requests, rate_rps=3.0)
+    v = simulate(copy.deepcopy(reqs), POLICIES["vllm"], cost)
+    i = simulate(copy.deepcopy(reqs), POLICIES["infercept"], cost)
+    print(f"\nat 3 rps: InferCept latency {i.normalized_latency():.4f} vs "
+          f"vLLM {v.normalized_latency():.4f} "
+          f"({v.normalized_latency()/i.normalized_latency():.2f}x better), "
+          f"waste {i.waste_fraction():.3f} vs {v.waste_fraction():.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""The paper's primary contribution: waste-quantified interception handling
+(Eqs. 1-5), budgeted/pipelined swap, chunked recomputation, and the
+min-waste iteration-level scheduler."""
+from repro.core import waste                                    # noqa: F401
+from repro.core.costmodel import CostModel                      # noqa: F401
+from repro.core.estimator import DurationEstimator              # noqa: F401
+from repro.core.policy import (BREAKDOWN, INFERCEPT,            # noqa: F401
+                               INFERCEPT_ORACLE, IMPROVED_DISCARD, POLICIES,
+                               PRESERVE, SWAP, VLLM, PolicyConfig)
+from repro.core.request import (Interception, Phase, Request,   # noqa: F401
+                                Segment)
+from repro.core.scheduler import (IterationPlan, Scheduler,     # noqa: F401
+                                  SchedulerStats)

@@ -1,0 +1,126 @@
+"""Request state machine for augmented-LLM serving.
+
+A request's lifetime is a script of segments: generate n tokens, then hit an
+interception (tool call / human turn / model call), whose completion appends
+returned tokens to the context, then generate again, ... until done. This
+mirrors the paper's workload model (§2.2): per-request number of
+interceptions, interception durations, and context lengths.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional
+
+
+class Phase(enum.Enum):
+    WAITING = "waiting"        # in the waiting queue (new / discarded / evicted)
+    RUNNING = "running"        # decoding, full context on device
+    PAUSED = "paused"          # interception in flight
+    SWAPQ = "swapq"            # resumed but context (partially) in host memory
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Interception:
+    kind: str                  # math | qa | ve | chatbot | image | tts
+    duration: float            # oracle duration (sim ground truth)
+    returned_tokens: int       # tokens appended to the context on completion
+
+
+@dataclasses.dataclass
+class Segment:
+    gen_tokens: int
+    interception: Optional[Interception]   # None for the final segment
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    arrival: float
+    prompt_len: int
+    segments: List[Segment]
+
+    # --- dynamic token accounting -----------------------------------------
+    seg_idx: int = 0
+    gen_in_seg: int = 0
+    target_ctx: int = 0        # tokens the context must hold to keep decoding
+    device_tokens: int = 0     # KV resident in device HBM
+    host_tokens: int = 0       # KV swapped out to host memory
+
+    # --- scheduling state ---------------------------------------------------
+    phase: Phase = Phase.WAITING
+    arrival_key: float = 0.0   # FCFS key (policy-dependent on re-queue)
+    t_call: float = 0.0        # when the current interception started
+    current_int: Optional[Interception] = None
+    pending_swap_out: int = 0  # tokens still assigned to budgeted swap-out
+    decision: str = ""         # last interception decision (metrics)
+
+    # --- metrics -------------------------------------------------------------
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    paused_time: float = 0.0
+    output_tokens: int = 0
+
+    def __post_init__(self):
+        self.target_ctx = self.prompt_len
+        self.arrival_key = self.arrival
+
+    # ------------------------------------------------------------------
+    @property
+    def to_compute(self) -> int:
+        """Tokens whose KV must be (re)computed before decoding resumes."""
+        return self.target_ctx - self.device_tokens - self.host_tokens
+
+    @property
+    def context_ready(self) -> bool:
+        return self.device_tokens == self.target_ctx
+
+    @property
+    def total_output(self) -> int:
+        return sum(s.gen_tokens for s in self.segments)
+
+    def current_segment(self) -> Segment:
+        return self.segments[self.seg_idx]
+
+    # ------------------------------------------------------------------
+    def advance_decode(self, now: float) -> Optional[Interception]:
+        """Account one decoded token; returns the interception hit, if any."""
+        assert self.phase == Phase.RUNNING and self.context_ready
+        self.target_ctx += 1
+        self.device_tokens += 1
+        self.gen_in_seg += 1
+        self.output_tokens += 1
+        if self.first_token_time is None:
+            self.first_token_time = now
+        seg = self.current_segment()
+        if self.gen_in_seg >= seg.gen_tokens:
+            return seg.interception     # may be None (request finished)
+        return None
+
+    def segment_done(self, now: float):
+        """Advance past the completed segment (interception or finish)."""
+        seg = self.current_segment()
+        if seg.interception is None:
+            self.phase = Phase.FINISHED
+            self.finish_time = now
+            return
+        self.seg_idx += 1
+        self.gen_in_seg = 0
+
+    def resume(self, now: float):
+        """Interception completed: append returned tokens to the context."""
+        assert self.current_int is not None
+        self.target_ctx += self.current_int.returned_tokens
+        self.paused_time += now - self.t_call
+        self.current_int = None
+
+    # ------------------------------------------------------------------
+    def latency_metrics(self):
+        assert self.finish_time is not None
+        e2e = self.finish_time - self.arrival - self.paused_time
+        return {"e2e": e2e,
+                "normalized": e2e / max(1, self.output_tokens),
+                "ttft": None if self.first_token_time is None
+                else self.first_token_time - self.arrival,
+                "output_tokens": self.output_tokens}

@@ -1,0 +1,404 @@
+"""InferCept's iteration-level min-waste scheduler (§4), plus the baseline
+policies (Discard/vLLM, ImprovedDiscard, Preserve, Swap) expressed as
+configurations of the same machinery.
+
+The scheduler is engine-agnostic: it plans token movement per iteration
+(IterationPlan) and does the bookkeeping in apply_plan(); the discrete-event
+simulator and the real JAX serving engine both drive it, the latter
+additionally executing the plan on device (model step, page swaps,
+recompute chunks).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.costmodel import CostModel
+from repro.core.estimator import DurationEstimator
+from repro.core.policy import SHORT_RUNNING_KINDS, PolicyConfig
+from repro.core.request import Interception, Phase, Request
+from repro.core.waste import min_waste_decision
+
+
+@dataclasses.dataclass
+class IterationPlan:
+    decode: List[Request] = dataclasses.field(default_factory=list)
+    chunks: List[Tuple[Request, int]] = dataclasses.field(default_factory=list)
+    swap_out: List[Tuple[Request, int]] = dataclasses.field(default_factory=list)
+    swap_in: List[Tuple[Request, int]] = dataclasses.field(default_factory=list)
+    stall_s: float = 0.0        # synchronous-swap stall (Swap baseline)
+
+    @property
+    def query_tokens(self) -> int:
+        return len(self.decode) + sum(n for _, n in self.chunks)
+
+    @property
+    def context_tokens(self) -> int:
+        return (sum(r.device_tokens for r in self.decode)
+                + sum(r.device_tokens for r, _ in self.chunks))
+
+    @property
+    def empty(self) -> bool:
+        return (not self.decode and not self.chunks and not self.swap_out
+                and not self.swap_in)
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    recompute_tokens: int = 0
+    fresh_tokens: int = 0
+    decode_tokens: int = 0
+    swapped_out_tokens: int = 0
+    swapped_in_tokens: int = 0
+    discards: int = 0
+    preserves: int = 0
+    swaps: int = 0
+    evictions: int = 0
+
+
+class Scheduler:
+    def __init__(self, policy: PolicyConfig, cost: CostModel, *,
+                 estimator: Optional[DurationEstimator] = None,
+                 gpu_capacity_tokens: Optional[int] = None,
+                 cpu_capacity_tokens: Optional[int] = None):
+        self.policy = policy
+        self.cost = cost
+        self.estimator = estimator or DurationEstimator(mode=policy.estimator)
+        self.gpu_capacity = (gpu_capacity_tokens if gpu_capacity_tokens
+                             is not None else cost.kv_capacity_tokens())
+        # Paper setup: ample host memory (A100 boxes have >1TB); default to
+        # 4x device KV capacity.
+        self.cpu_capacity = (cpu_capacity_tokens if cpu_capacity_tokens
+                             is not None else 4 * self.gpu_capacity)
+
+        self.running: List[Request] = []
+        self.paused: List[Request] = []
+        self.swap_queue: List[Request] = []
+        self.waiting: List[Request] = []
+        self.swap_out_order: List[Request] = []   # waste-priority order
+        self.live: Dict[int, Request] = {}
+        self.stats = SchedulerStats()
+        self._recompute_debt: Dict[int, int] = {}
+        # Engine hook: called as on_discard(req, n_device_tokens_dropped)
+        # right before a request's device-resident context is released.
+        self.on_discard = None
+
+    # ------------------------------------------------------------------
+    # memory accounting
+    # ------------------------------------------------------------------
+    def gpu_used(self) -> int:
+        return sum(r.device_tokens for r in self.live.values())
+
+    def gpu_free(self) -> int:
+        return self.gpu_capacity - self.gpu_used()
+
+    def cpu_used(self) -> int:
+        return sum(r.host_tokens for r in self.live.values())
+
+    def cpu_free(self) -> int:
+        return self.cpu_capacity - self.cpu_used()
+
+    # ------------------------------------------------------------------
+    # request lifecycle notifications
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        req.phase = Phase.WAITING
+        req.arrival_key = req.arrival
+        self.live[req.rid] = req
+        self._insert_waiting(req)
+
+    def _insert_waiting(self, req: Request):
+        self.waiting.append(req)
+        self.waiting.sort(key=lambda r: (r.arrival_key, r.rid))
+
+    def notify_intercepted(self, req: Request, intc: Interception, now: float):
+        """Called when a decoded token triggers an augmentation call."""
+        req.segment_done(now)
+        if req.phase == Phase.FINISHED:
+            return
+        req.phase = Phase.PAUSED
+        req.t_call = now
+        req.current_int = intc
+        self.running.remove(req)
+        self.paused.append(req)
+
+        pol = self.policy
+        if pol.decision == "discard":
+            self._discard(req, now)
+        elif pol.decision == "preserve":
+            req.decision = "preserve"
+            self.stats.preserves += 1
+        elif pol.decision == "swap_first":
+            self._enqueue_swap_out(req, now)
+        elif pol.decision == "heuristic":
+            if intc.kind in SHORT_RUNNING_KINDS:
+                req.decision = "preserve"
+                self.stats.preserves += 1
+            else:
+                self._enqueue_swap_out(req, now)
+        elif pol.decision == "min_waste":
+            # decided (and re-decided) at each iteration boundary in
+            # _min_waste_pass(); until then the context stays put.
+            req.decision = "pending"
+        else:
+            raise ValueError(pol.decision)
+
+    def _discard(self, req: Request, now: float):
+        if req.device_tokens:
+            if self.on_discard is not None:
+                self.on_discard(req, req.device_tokens)
+            self._recompute_debt[req.rid] = (
+                self._recompute_debt.get(req.rid, 0) + req.device_tokens)
+            req.device_tokens = 0
+        if req in self.swap_out_order:
+            self.swap_out_order.remove(req)
+        req.pending_swap_out = 0
+        req.decision = "discard"
+        self.stats.discards += 1
+
+    def _enqueue_swap_out(self, req: Request, now: float):
+        amount = min(req.device_tokens, self.cpu_free())
+        if amount <= 0:
+            self._discard(req, now)
+            return
+        req.pending_swap_out = amount
+        req.decision = "swap"
+        if req not in self.swap_out_order:
+            self.swap_out_order.append(req)
+        self.stats.swaps += 1
+
+    def notify_resumed(self, req: Request, now: float):
+        """Interception finished: returned tokens arrive, request resumes."""
+        req.resume(now)
+        self.paused.remove(req)
+        if req in self.swap_out_order:
+            self.swap_out_order.remove(req)
+        req.pending_swap_out = 0
+        if not self.policy.requeue_original_arrival:
+            req.arrival_key = now
+        if req.host_tokens > 0:
+            req.phase = Phase.SWAPQ
+            self.swap_queue.append(req)
+            self.swap_queue.sort(key=lambda r: (r.arrival_key, r.rid))
+        elif req.to_compute > 0:
+            req.phase = Phase.WAITING
+            self._insert_waiting(req)
+        else:
+            req.phase = Phase.RUNNING
+            self.running.append(req)
+
+    # ------------------------------------------------------------------
+    # the per-iteration decision (§4.3)
+    # ------------------------------------------------------------------
+    def next_iteration(self, now: float) -> IterationPlan:
+        plan = IterationPlan()
+        pol = self.policy
+
+        # 1. decode batch: every running request generates one token.
+        plan.decode = list(self.running)
+        decode_need = len(plan.decode)
+
+        # 2. eviction under memory pressure (vLLM-style recompute preempt:
+        #    latest-arrival running requests are discarded to the wait queue).
+        while decode_need > self.gpu_free() + 0 and self.running:
+            victim = max(self.running, key=lambda r: (r.arrival_key, r.rid))
+            self.running.remove(victim)
+            plan.decode.remove(victim)
+            self._discard(victim, now)
+            victim.decision = ""
+            victim.phase = Phase.WAITING
+            self._insert_waiting(victim)
+            self.stats.evictions += 1
+            decode_need = len(plan.decode)
+
+        free = self.gpu_free() - decode_need
+
+        # 3. admission from the waiting queue, FCFS by arrival key.
+        sat = self.cost.saturation_tokens
+        chunk_budget = max(0, sat - decode_need) if pol.chunked_recompute \
+            else None
+        for req in list(self.waiting):
+            n = req.to_compute
+            if n <= 0:
+                # preserved-resumed request with nothing to compute
+                self.waiting.remove(req)
+                req.phase = Phase.RUNNING
+                self.running.append(req)
+                continue
+            if pol.chunked_recompute:
+                if chunk_budget <= 0:
+                    break
+                n = min(n, chunk_budget)
+            if n > free:
+                if pol.chunked_recompute and free > 0:
+                    n = free
+                else:
+                    break  # FCFS head-of-line: wait for memory
+            plan.chunks.append((req, n))
+            free -= n
+            if pol.chunked_recompute:
+                chunk_budget -= n
+
+        # 4. swap budget N_i: what the link can hide behind this iteration's
+        #    forwarding (§4.1). Unbudgeted Swap moves everything and stalls.
+        if pol.swap_enabled:
+            if pol.swap_budgeted:
+                t_iter = self.cost.t_fwd(max(1, plan.query_tokens),
+                                         plan.context_tokens)
+                budget = self.cost.swap_tokens_within(t_iter)
+            else:
+                budget = None  # unbounded, but stalls
+            if pol.decision == "min_waste":
+                budget = self._min_waste_pass(plan, budget, now)
+            self._plan_swap_out(plan, budget)
+            budget = (None if budget is None
+                      else budget - sum(n for _, n in plan.swap_out))
+            self._plan_swap_in(plan, budget, free)
+
+        return plan
+
+    def _plan_swap_out(self, plan: IterationPlan, budget: Optional[int]):
+        used = sum(n for _, n in plan.swap_out)
+        cpu_free = self.cpu_free()
+        for req in list(self.swap_out_order):
+            if budget is not None and used >= budget:
+                break
+            if any(r is req for r, _ in plan.swap_out):
+                continue
+            n = min(req.pending_swap_out, cpu_free)
+            if budget is not None:
+                n = min(n, budget - used)
+            if n <= 0:
+                continue
+            plan.swap_out.append((req, n))
+            used += n
+            cpu_free -= n
+            if budget is None:
+                plan.stall_s += self.cost.t_swap(n)
+
+    def _plan_swap_in(self, plan: IterationPlan, budget: Optional[int],
+                      free: int):
+        used = 0
+        for req in list(self.swap_queue):
+            if budget is not None and used >= budget:
+                break
+            n = req.host_tokens
+            if budget is not None:
+                n = min(n, budget - used)
+            n = min(n, free)
+            if n <= 0:
+                break  # FCFS by original arrival; no skipping ahead
+            plan.swap_in.append((req, n))
+            used += n
+            free -= n
+            if budget is None:
+                plan.stall_s += self.cost.t_swap(n)
+
+    def _min_waste_pass(self, plan: IterationPlan, budget: int,
+                        now: float) -> int:
+        """§4.3: sort intercepted requests by potential waste (Eq. 5
+        min-waste); give this iteration's swap-out budget to the top of the
+        order; the remainder preserve or discard by the Eq. 5 argmin. Runs
+        every iteration so the dynamic duration estimate (§4.4) can flip
+        earlier preserve decisions. Returns the remaining budget."""
+        candidates = [r for r in self.paused if r.device_tokens > 0]
+        if not candidates:
+            return budget
+        c_other = self.gpu_used()
+        sat = max(1, self.cost.saturation_tokens)
+        scored = []
+        for r in candidates:
+            t_int = self.estimator.estimate(r, now)
+            c = r.device_tokens
+            n_chunks = max(1, -(-c // sat))
+            decision, w = min_waste_decision(
+                t_int_est=t_int, c_tokens=c, m_bytes=self.cost.m_bytes,
+                t_fwd_c=self.cost.t_fwd(c), n_chunks=n_chunks,
+                t_fwd_chunk=self.cost.t_fwd(min(c, sat)),
+                c_other_tokens=max(0, c_other - c))
+            scored.append((w, decision, r))
+        scored.sort(key=lambda t: (-t[0], t[2].rid))
+
+        remaining = budget
+        cpu_free = self.cpu_free()
+        for w, decision, r in scored:
+            n = min(r.device_tokens, remaining, cpu_free)
+            if n > 0:
+                plan.swap_out.append((r, n))
+                remaining -= n
+                cpu_free -= n
+                if r.decision != "swap":
+                    r.decision = "swap"
+                    self.stats.swaps += 1
+                # leftover context of a partially-swapped request stays for
+                # the next iteration's re-evaluation (pipelined swap, §4.1)
+            elif decision == "discard":
+                self._discard(r, now)
+            else:
+                if r.decision != "preserve":
+                    r.decision = "preserve"
+                    self.stats.preserves += 1
+        return remaining
+
+    # ------------------------------------------------------------------
+    # bookkeeping after the engine/simulator executes a plan
+    # ------------------------------------------------------------------
+    def apply_plan(self, plan: IterationPlan, end_time: float):
+        """Account token movement; returns events:
+        {"intercepted": [(req, interception)], "finished": [req]}."""
+        for req, n in plan.swap_out:
+            req.device_tokens -= n
+            req.host_tokens += n
+            req.pending_swap_out = max(0, req.pending_swap_out - n)
+            self.stats.swapped_out_tokens += n
+            if req.pending_swap_out <= 0 and req in self.swap_out_order:
+                self.swap_out_order.remove(req)
+
+        for req, n in plan.swap_in:
+            req.host_tokens -= n
+            req.device_tokens += n
+            self.stats.swapped_in_tokens += n
+            if req.host_tokens == 0:
+                self.swap_queue.remove(req)
+                if req.to_compute > 0:
+                    req.phase = Phase.WAITING
+                    self._insert_waiting(req)
+                else:
+                    req.phase = Phase.RUNNING
+                    self.running.append(req)
+
+        for req, n in plan.chunks:
+            req.device_tokens += n
+            debt = self._recompute_debt.get(req.rid, 0)
+            rec = min(n, debt)
+            if rec:
+                self._recompute_debt[req.rid] = debt - rec
+            self.stats.recompute_tokens += rec
+            self.stats.fresh_tokens += n - rec
+            if req.context_ready:
+                self.waiting.remove(req)
+                req.phase = Phase.RUNNING
+                self.running.append(req)
+
+        events = {"intercepted": [], "finished": []}
+        for req in plan.decode:
+            self.stats.decode_tokens += 1
+            intc = req.advance_decode(end_time)
+            if req.gen_in_seg >= req.current_segment().gen_tokens:
+                if intc is not None:
+                    events["intercepted"].append((req, intc))
+                else:
+                    req.segment_done(end_time)
+                    self.running.remove(req)
+                    del self.live[req.rid]
+                    self._recompute_debt.pop(req.rid, None)
+                    events["finished"].append(req)
+        return events
+
+    # ------------------------------------------------------------------
+    def has_work(self) -> bool:
+        return bool(self.running or self.waiting or self.swap_queue
+                    or self.paused)
+
+    def paused_device_tokens(self) -> int:
+        return sum(r.device_tokens for r in self.paused)

@@ -1,0 +1,52 @@
+"""The paper's GPU-memory-waste accounting (§3.2, Equations 1-4).
+
+All quantities are in byte-seconds (GB*s up to scaling): "how much GPU
+memory is held without producing tokens, for how long". ``M`` is the
+per-token KV-cache footprint in bytes (ModelConfig.kv_token_bytes());
+``t_fwd`` / ``t_swap`` come from the cost model (offline profiling in the
+paper).
+"""
+from __future__ import annotations
+
+
+def waste_discard(t_fwd_c: float, c_tokens: int, m_bytes: float,
+                  c_other_tokens: int) -> float:
+    """Eq. 1: recomputation occupies memory producing no new tokens, and the
+    lengthened iteration wastes every other running request's memory."""
+    return t_fwd_c * c_tokens * m_bytes + t_fwd_c * c_other_tokens * m_bytes
+
+
+def waste_preserve(t_int: float, c_tokens: int, m_bytes: float) -> float:
+    """Eq. 2: the paused request's whole context is held for the
+    interception's duration."""
+    return t_int * c_tokens * m_bytes
+
+
+def waste_swap(t_swap_c: float, c_batch_tokens: int, m_bytes: float) -> float:
+    """Eq. 3: synchronous swap stalls the whole batch for the transfer, out
+    and back in (hence the factor 2)."""
+    return 2.0 * t_swap_c * c_batch_tokens * m_bytes
+
+
+def waste_chunked_discard(t_fwd_c: float, c_tokens: int, m_bytes: float,
+                          n_chunks: int, t_fwd_chunk: float,
+                          c_other_tokens: int) -> float:
+    """Eq. 4: chunked recomputation halves the self-occupancy term (memory
+    ramps linearly instead of being held for the full recompute) and the
+    other-requests term shrinks because chunks piggyback on decode
+    iterations (n * t_fwd(C/n) <= t_fwd(C))."""
+    return (t_fwd_c * c_tokens * m_bytes / 2.0
+            + n_chunks * t_fwd_chunk * c_other_tokens * m_bytes)
+
+
+def min_waste_decision(*, t_int_est: float, c_tokens: int, m_bytes: float,
+                       t_fwd_c: float, n_chunks: int, t_fwd_chunk: float,
+                       c_other_tokens: int):
+    """Eq. 5: min(WastePreserve, WasteChunkDiscard) for one intercepted
+    request. Returns (decision, waste) with decision in
+    {"preserve", "discard"}; swap is allocated separately by budget order.
+    """
+    wp = waste_preserve(t_int_est, c_tokens, m_bytes)
+    wd = waste_chunked_discard(t_fwd_c, c_tokens, m_bytes, n_chunks,
+                               t_fwd_chunk, c_other_tokens)
+    return ("preserve", wp) if wp <= wd else ("discard", wd)

@@ -1,0 +1,131 @@
+"""Flash attention Pallas TPU kernel (prefill / training).
+
+TPU adaptation notes (DESIGN.md §2): blocks are sized so the live working
+set — q block (G*bq, hd), one kv block (bk, hd), f32 accumulators — fits
+VMEM, with bq/bk multiples of 128 to keep the MXU systolic array fully fed.
+GQA is handled natively: all G query heads sharing a KV head live in one
+block, so KV is streamed HBM->VMEM exactly once per q block (the MQA/GQA
+bandwidth saving is structural, not a repeat-kv copy).
+
+Layout: q (B, Hkv, G, Tq, hd); k, v (B, Hkv, Tk, hd); out like q.
+Grid: (B, Hkv, nq, nk), nk innermost; online-softmax state in VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  bq: int, bk: int, causal: bool, window, softcap, scale,
+                  tq: int, tk: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # block-level causal/window skip: rows of this q block span
+    # [q_lo, q_hi]; kv block spans [k_lo, k_hi] (right-aligned positions).
+    offs = tk - tq
+    q_lo = iq * bq + offs
+    k_lo = ik * bk
+    run = True
+    if causal:
+        run = jnp.logical_and(run, k_lo <= q_lo + bq - 1)
+    if window is not None:
+        run = jnp.logical_and(run, k_lo + bk - 1 > q_lo - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)               # (G, bq, hd)
+        G, _, hd = q.shape
+        q2 = q.reshape(G * bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)               # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q2, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        rows = jax.lax.broadcasted_iota(jnp.int32, (G * bq, bk), 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (G * bq, bk), 1)
+        qpos = rows % bq + q_lo
+        kpos = cols + k_lo
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_prev * corr + jnp.sum(p, axis=-1)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _flush():
+        G = o_ref.shape[2]
+        hd = o_ref.shape[-1]
+        l = jnp.maximum(l_ref[...], 1e-37)
+        out = (acc_ref[...] / l[:, None]).reshape(G, bq, hd)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "scale", "bq", "bk",
+                     "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    scale=None, bq=128, bk=128, interpret=None):
+    """q: (B, Hkv, G, Tq, hd); k, v: (B, Hkv, Tk, hd)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    B, Hkv, G, Tq, hd = q.shape
+    Tk = k.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    bq = min(bq, Tq)
+    bk = min(bk, Tk)
+    assert Tq % bq == 0 and Tk % bk == 0, "pad sequence to block multiples"
+    nq, nk = Tq // bq, Tk // bk
+
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, causal=causal, window=window,
+        softcap=softcap, scale=scale, tq=Tq, tk=Tk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, bq, hd),
+                         lambda b, h, iq, ik: (b, h, 0, iq, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, iq, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, iq, ik: (b, h, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, bq, hd),
+                               lambda b, h, iq, ik: (b, h, 0, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G * bq, hd), jnp.float32),
+            pltpu.VMEM((G * bq,), jnp.float32),
+            pltpu.VMEM((G * bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,106 @@
+"""Chunkwise gated-linear-attention Pallas TPU kernel (Mamba2 SSD / mLSTM).
+
+The SSM hot path: S_t = a_t * S_{t-1} + k_t v_t^T, y_t = q_t S_t, processed
+in chunks of ``c`` steps — intra-chunk decay-masked attention on the MXU
+plus an inter-chunk state recurrence carried in a VMEM scratch accumulator
+across sequential grid steps.
+
+TPU adaptation: the (dk, dv) state lives in VMEM f32 scratch for the whole
+sequence sweep (grid iterates chunks innermost per (batch, head)), so the
+recurrence never round-trips HBM; chunk size is picked so the c x c decay
+matrix and the c x dk/dv tiles are MXU-aligned (c a multiple of 128 ideal,
+validated down to 16 in interpret mode).
+
+Layout: q, k: (B, H, T, dk); v: (B, H, T, dv); log_a: (B, H, T);
+grid (B*H, T/c). Matches repro.models.ssm.chunked_gla (the oracle).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gla_kernel(q_ref, k_ref, v_ref, la_ref, y_ref, s_final_ref, state_ref,
+                *, chunk: int):
+    n = pl.program_id(1)
+    nn = pl.num_programs(1)
+
+    @pl.when(n == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    q = q_ref[0].astype(jnp.float32)            # (c, dk)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)            # (c, dv)
+    la = la_ref[0].astype(jnp.float32)          # (c,)
+    lb = jnp.cumsum(la)                         # inclusive
+
+    # intra-chunk: D_ij = exp(lb_i - lb_j) for j <= i
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    D = jnp.where(rows >= cols, jnp.exp(lb[:, None] - lb[None, :]), 0.0)
+    att = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32) * D
+    y = jax.lax.dot_general(att, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    # inter-chunk contribution from the carried state
+    S = state_ref[...]
+    y = y + jnp.exp(lb)[:, None] * jax.lax.dot_general(
+        q, S, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # state update to the end of the chunk
+    decay_to_end = jnp.exp(lb[-1] - lb)          # (c,)
+    U = jax.lax.dot_general(k * decay_to_end[:, None], v,
+                            (((0,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    state_ref[...] = jnp.exp(lb[-1]) * S + U
+
+    @pl.when(n == nn - 1)
+    def _flush():
+        s_final_ref[0] = state_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def gla_scan(q, k, v, log_a, *, chunk: int = 128, interpret=None):
+    """Returns (y (B, H, T, dv), final_state (B, H, dk, dv) f32)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    B, H, T, dk = q.shape
+    dv = v.shape[-1]
+    c = min(chunk, T)
+    assert T % c == 0, "pad T to a chunk multiple"
+    n = T // c
+    BH = B * H
+    qf = q.reshape(BH, T, dk)
+    kf = k.reshape(BH, T, dk)
+    vf = v.reshape(BH, T, dv)
+    laf = log_a.reshape(BH, T)
+
+    kernel = functools.partial(_gla_kernel, chunk=c)
+    y, s_final = pl.pallas_call(
+        kernel,
+        grid=(BH, n),
+        in_specs=[
+            pl.BlockSpec((1, c, dk), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, c, dk), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, c, dv), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, c), lambda b, i: (b, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c, dv), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, dk, dv), lambda b, i: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, T, dv), v.dtype),
+            jax.ShapeDtypeStruct((BH, dk, dv), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        interpret=interpret,
+    )(qf, kf, vf, laf)
+    return (y.reshape(B, H, T, dv),
+            s_final.reshape(B, H, dk, dv))

@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None,
+                        softcap=None, scale=None):
+    """q: (B, Hkv, G, Tq, hd); k, v: (B, Hkv, Tk, hd). Naive O(T^2)."""
+    B, Hkv, G, Tq, hd = q.shape
+    Tk = k.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(Tq)[:, None] + (Tk - Tq)   # right-aligned positions
+    kpos = jnp.arange(Tk)[None, :]
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def paged_attention_ref(q, kv_pages_k, kv_pages_v, block_tables, ctx_lens, *,
+                        softcap=None, scale=None):
+    """Decode attention over a paged KV pool.
+
+    q: (B, Hkv, G, hd); pools: (n_pages, page, Hkv, hd);
+    block_tables: (B, max_pages) int32; ctx_lens: (B,) tokens valid.
+    """
+    B, Hkv, G, hd = q.shape
+    page = kv_pages_k.shape[1]
+    max_pages = block_tables.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    # gather to (B, max_pages*page, Hkv, hd)
+    k = kv_pages_k[block_tables].reshape(B, max_pages * page, Hkv, hd)
+    v = kv_pages_v[block_tables].reshape(B, max_pages * page, Hkv, hd)
+    s = jnp.einsum("bhgd,bshd->bhgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    valid = jnp.arange(max_pages * page)[None] < ctx_lens[:, None]
+    s = jnp.where(valid[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def swap_pack_ref(pool, page_ids):
+    """Gather scattered pages into a contiguous staging buffer.
+    pool: (n_pages, page, Hkv, hd); page_ids: (n,)."""
+    return pool[page_ids]
+
+
+def swap_unpack_ref(pool, staging, page_ids):
+    """Scatter a contiguous staging buffer back into pool pages."""
+    return pool.at[page_ids].set(staging.astype(pool.dtype))

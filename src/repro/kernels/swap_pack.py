@@ -1,0 +1,87 @@
+"""Swap pack/unpack Pallas TPU kernels.
+
+The paper's Swap analysis (§3.2) found that with PagedAttention the context
+of one request scatters across many non-contiguous pages, so swapping costs
+one kernel launch per region on GPU. The TPU analogue is many small
+host DMAs. Adaptation (DESIGN.md §2): coalesce on-device first — a gather
+kernel packs the request's pages into one contiguous staging buffer (swap
+out), and a scatter kernel writes a staged buffer back into pool pages
+(swap in). The host transfer then moves one big contiguous slab, which is
+what the PCIe path wants, and the gather itself is HBM-bandwidth-bound
+(cheap, hidden behind the model step per the §4.1 budget).
+
+Grid: (n_pages_to_move,), page id as scalar-prefetch for the dynamic index.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _pack_kernel(page_ids, src_ref, dst_ref):
+    del page_ids
+    dst_ref[...] = src_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def swap_pack(pool, page_ids, *, interpret=None):
+    """Gather pool pages into a contiguous staging buffer.
+
+    pool: (n_pages, page, Hkv, hd); page_ids: (n,) int32 -> (n, page, Hkv, hd).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    n = page_ids.shape[0]
+    _, page, Hkv, hd = pool.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, page, Hkv, hd),
+                               lambda i, ids: (ids[i], 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, page, Hkv, hd),
+                               lambda i, ids: (i, 0, 0, 0)),
+    )
+    return pl.pallas_call(
+        _pack_kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, page, Hkv, hd), pool.dtype),
+        interpret=interpret,
+    )(page_ids, pool)
+
+
+def _unpack_kernel(page_ids, pool_in_ref, staging_ref, pool_ref):
+    del page_ids, pool_in_ref   # pool content flows through the alias
+    pool_ref[...] = staging_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def swap_unpack(pool, staging, page_ids, *, interpret=None):
+    """Scatter a staged buffer back into pool pages (returns updated pool).
+
+    pool: (n_pages, page, Hkv, hd); staging: (n, page, Hkv, hd);
+    page_ids: (n,) int32. The pool is aliased to the output, so only the
+    targeted pages are rewritten.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    n = page_ids.shape[0]
+    _, page, Hkv, hd = pool.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, page, Hkv, hd),
+                               lambda i, ids: (ids[i], 0, 0, 0)),
+                  pl.BlockSpec((1, page, Hkv, hd),
+                               lambda i, ids: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, page, Hkv, hd),
+                               lambda i, ids: (ids[i], 0, 0, 0)),
+    )
+    return pl.pallas_call(
+        _unpack_kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        input_output_aliases={1: 0},   # alias the pool to the output
+        interpret=interpret,
+    )(page_ids, pool, staging)

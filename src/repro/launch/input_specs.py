@@ -1,0 +1,88 @@
+"""ShapeDtypeStruct stand-ins for every (architecture x input shape) pair —
+weak-type-correct, shardable, no device allocation.
+
+For the modality-stub architectures (the one allowed carve-out):
+  * vlm (pixtral): precomputed patch embeddings (B, vision_prefix_len, d)
+    plus text tokens for the remainder of the sequence.
+  * audio (musicgen): 4-codebook EnCodec token ids (B, S, K).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_inputs(cfg: ModelConfig, shape: InputShape):
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.n_codebooks:
+        toks = SDS((B, S, cfg.n_codebooks), jnp.int32)
+        labels = SDS((B, S, cfg.n_codebooks), jnp.int32)
+        return {"tokens": toks, "labels": labels,
+                "mask": SDS((B, S), jnp.float32), "embeds": None}
+    P = cfg.vision_prefix_len
+    toks = SDS((B, S - P), jnp.int32)
+    embeds = SDS((B, P, cfg.d_model), jnp.bfloat16) if P else None
+    return {"tokens": toks, "labels": SDS((B, S - P), jnp.int32),
+            "mask": SDS((B, S - P), jnp.float32), "embeds": embeds}
+
+
+def prefill_inputs(cfg: ModelConfig, shape: InputShape):
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.n_codebooks:
+        return {"tokens": SDS((B, S, cfg.n_codebooks), jnp.int32),
+                "embeds": None}
+    P = cfg.vision_prefix_len
+    embeds = SDS((B, P, cfg.d_model), jnp.bfloat16) if P else None
+    return {"tokens": SDS((B, S - P), jnp.int32), "embeds": embeds}
+
+
+def decode_inputs(cfg: ModelConfig, shape: InputShape):
+    B = shape.global_batch
+    if cfg.n_codebooks:
+        toks = SDS((B, cfg.n_codebooks), jnp.int32)
+    else:
+        toks = SDS((B,), jnp.int32)
+    return {"tokens": toks, "pos": SDS((B,), jnp.int32)}
+
+
+def cache_struct(cfg: ModelConfig, shape: InputShape, window_override):
+    """Decode-cache ShapeDtypeStructs via eval_shape (no allocation)."""
+    from repro.models import LM
+    model = LM(cfg)
+
+    def mk():
+        return model.init_cache(shape.global_batch, shape.seq_len,
+                                dtype=cfg.dtype,
+                                window_override=window_override)
+    return jax.eval_shape(mk)
+
+
+def params_struct(cfg: ModelConfig, dtype=None):
+    from repro.models import LM
+    model = LM(cfg)
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0),
+                                             dtype=dtype or cfg.dtype))
+
+
+def window_override_for(cfg: ModelConfig, shape: InputShape):
+    """long_500k decode must be sub-quadratic / memory-bounded: dense
+    full-attention layers fall back to a sliding window
+    (cfg.long_context_window); SSM/MLA are naturally O(1)/compressed and
+    keep their configured behaviour ("cfg")."""
+    if shape.name == "long_500k":
+        return cfg.long_context_window
+    return "cfg"
+
+
+def input_specs(cfg: ModelConfig, shape_name: str):
+    """The full stand-in bundle for one (arch, shape) pair."""
+    shape = INPUT_SHAPES[shape_name]
+    if shape.mode == "train":
+        return train_inputs(cfg, shape)
+    if shape.mode == "prefill":
+        return prefill_inputs(cfg, shape)
+    return decode_inputs(cfg, shape)

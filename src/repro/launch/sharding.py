@@ -1,0 +1,267 @@
+"""Logical->physical sharding rules for every parameter / cache / input
+tensor, with divisibility fallbacks (a dim that doesn't divide its mesh axis
+is replicated rather than failing to lower).
+
+Logical axes:
+  vocab / heads / ff / experts -> "model" (tensor parallel)
+  fsdp                         -> "data"  (FSDP weight sharding; on for
+                                  training always, and for serving when the
+                                  model doesn't fit model-parallel alone)
+  batch                        -> ("pod","data") / ("data",)
+  kv_seq                       -> "model" when kv heads don't divide it
+                                  (sequence-parallel decode, flash-decoding
+                                  style: XLA inserts the softmax all-reduce)
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import axis_size, data_axes
+
+# name -> logical axes of the TRAILING dims (leading scan/period dims pad
+# with None automatically). Entries may be lists keyed by trailing ndim when
+# a name is reused at different ranks (mlp vs moe expert weights).
+PARAM_RULES = {
+    "embed":     {2: ("vocab", "fsdp"), 3: (None, "vocab", "fsdp")},
+    "lm_head":   {2: ("fsdp", "vocab"), 3: (None, "fsdp", "vocab")},
+    "final_norm": {1: (None,)},
+    # attention
+    "wq":        {3: ("fsdp", "heads", None)},
+    "wk":        {3: ("fsdp", "heads", None)},
+    "wv":        {3: ("fsdp", "heads", None)},
+    "wo":        {3: ("heads", None, "fsdp")},
+    "bq":        {2: ("heads", None)},
+    "bk":        {2: ("heads", None)},
+    "bv":        {2: ("heads", None)},
+    "norm1":     {1: (None,)},
+    "norm2":     {1: (None,)},
+    "post_norm1": {1: (None,)},
+    "post_norm2": {1: (None,)},
+    # MLA
+    "w_dq":      {2: ("fsdp", None)},
+    "w_uq":      {3: (None, "heads", None)},
+    "w_dkv":     {2: ("fsdp", None)},
+    "w_uk":      {3: (None, "heads", None)},
+    "w_uv":      {3: (None, "heads", None)},
+    "q_norm":    {1: (None,)},
+    "kv_norm":   {1: (None,)},
+    # dense mlp / shared experts (2D; scanned leading dims pad with None)
+    "w_gate":    {2: ("fsdp", "ff")},
+    "w_up":      {2: ("fsdp", "ff")},
+    "w_down":    {2: ("ff", "fsdp")},
+    # routed moe experts (distinct names so the scanned-stack leading dim of
+    # 2D weights can never match the expert rule)
+    "we_gate":   {3: ("experts", "fsdp", None)},
+    "we_up":     {3: ("experts", "fsdp", None)},
+    "we_down":   {3: ("experts", None, "fsdp")},
+    "router":    {2: (None, "experts")},
+    # ssm
+    "w_in":      {2: ("fsdp", "ff")},
+    "w_out":     {2: ("ff", "fsdp")},
+    "conv_w":    {2: (None, "ff")},
+    "conv_b":    {1: ("ff",)},
+    "A_log":     {1: (None,)},
+    "D":         {1: (None,)},
+    "dt_bias":   {1: (None,)},
+    "gate_norm": {1: ("ff",)},
+    "head_norm": {1: ("ff",)},
+    "norm":      {1: (None,)},
+    "w_q":       {2: ("ff", None)},
+    "w_k":       {2: ("ff", None)},
+    "w_v":       {2: ("ff", None)},
+    "w_if":      {2: ("ff", None)},
+    "b_i":       {1: (None,)},
+    "b_f":       {1: (None,)},
+    "w_x":       {2: ("fsdp", "ff")},
+    "r":         {3: (None, None, None)},
+    "b":         {1: ("ff",)},
+    "step":      {0: ()},
+}
+
+
+def _logical_to_mesh(mesh, logical: str, dim: int, *, fsdp: bool,
+                     tensor_parallel: bool = True,
+                     expert_2d: bool = False):
+    if logical is None:
+        return None
+    if logical == "fsdp":
+        if not fsdp:
+            return None
+        ax = "data"
+    elif logical == "experts" and expert_2d:
+        # 2D expert sharding: experts spread over data x model so expert
+        # weights are never all-gathered (PERF-3, EXPERIMENTS.md §Perf)
+        both = axis_size(mesh, "data") * axis_size(mesh, "model")
+        if dim % both == 0:
+            return ("data", "model")
+        ax = "model"
+    else:
+        if not tensor_parallel:
+            return None
+        ax = "model"
+    size = axis_size(mesh, ax)
+    return ax if size > 1 and dim % size == 0 else None
+
+
+def _spec_for_leaf(mesh, name: str, shape, *, fsdp: bool,
+                   tensor_parallel: bool = True,
+                   expert_2d: bool = False) -> P:
+    rules = PARAM_RULES.get(name)
+    if rules is None:
+        return P()  # replicate unknown leaves
+    nd = len(shape)
+    tail = None
+    for k in sorted(rules, reverse=True):
+        if k <= nd:
+            tail = rules[k]
+            break
+    if tail is None:
+        return P()
+    lead = nd - len(tail)
+    axes = [None] * lead
+    used = set()
+    for logical, dim in zip(tail, shape[lead:]):
+        ax = _logical_to_mesh(mesh, logical, dim, fsdp=fsdp,
+                              tensor_parallel=tensor_parallel,
+                              expert_2d=expert_2d)
+        members = ax if isinstance(ax, tuple) else (ax,)
+        if any(m in used for m in members if m is not None):
+            ax = None
+        else:
+            for m in members:
+                if m is not None:
+                    used.add(m)
+        axes.append(ax)
+    return P(*axes)
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+    return ""
+
+
+def param_shardings(mesh, params_shapes, *, fsdp: bool,
+                    tensor_parallel: bool = True, expert_2d: bool = False):
+    """NamedSharding pytree for a params (or optimizer-state) tree given its
+    eval_shape result."""
+    def one(path, leaf):
+        spec = _spec_for_leaf(mesh, _leaf_name(path), leaf.shape, fsdp=fsdp,
+                              tensor_parallel=tensor_parallel,
+                              expert_2d=expert_2d)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+# --------------------------------------------------------------------------
+# cache / activation shardings
+# --------------------------------------------------------------------------
+
+def cache_shardings(mesh, cfg: ModelConfig, cache_shapes, *,
+                    seq_shard: bool = True):
+    """Decode-cache shardings. Leaves (structure from LM.init_cache):
+      attn k/v:   (periods, B, S, kv_heads, hd)
+      mla c/kr:   (periods, B, S, dim)
+      ssm ssm:    (periods, B, H, dk, dv); conv: (periods, B, w, C)
+      slstm c/n/h/m: (periods, B, d_inner)
+    Batch -> data axes; kv heads -> model when divisible, else the sequence
+    dim -> model (sequence-parallel decode).
+    """
+    model_sz = axis_size(mesh, "model")
+    dp = data_axes(mesh)
+
+    def batch_ax(b):
+        # try ("pod","data") jointly, then "data" alone
+        total = 1
+        for a in dp:
+            total *= axis_size(mesh, a)
+        if b % total == 0:
+            return dp if len(dp) > 1 else dp[0]
+        if b % axis_size(mesh, "data") == 0:
+            return "data"
+        return None
+
+    def one(path, leaf):
+        name = _leaf_name(path)
+        shape = leaf.shape
+        nd = len(shape)
+        if name in ("k", "v") and nd == 5:
+            _, B, S, kvh, _ = shape
+            if kvh % model_sz == 0:
+                spec = P(None, batch_ax(B), None, "model", None)
+            elif seq_shard and S % model_sz == 0:
+                spec = P(None, batch_ax(B), "model", None, None)
+            else:
+                spec = P(None, batch_ax(B), None, None, None)
+        elif name in ("c", "kr") and nd == 4:
+            _, B, S, _ = shape
+            if seq_shard and S % model_sz == 0:
+                spec = P(None, batch_ax(B), "model", None)
+            else:
+                spec = P(None, batch_ax(B), None, None)
+        elif name == "ssm" and nd == 5:  # mamba2 state (B,H,dk,dv)
+            _, B, H, dk, _ = shape
+            if H % model_sz == 0:
+                spec = P(None, batch_ax(B), "model", None, None)
+            elif dk % model_sz == 0:
+                spec = P(None, batch_ax(B), None, "model", None)
+            else:
+                spec = P(None, batch_ax(B), None, None, None)
+        elif name == "conv" and nd == 4:
+            _, B, _, C = shape
+            spec = P(None, batch_ax(B), None,
+                     "model" if C % model_sz == 0 else None)
+        elif name == "S" and nd == 5:   # mlstm matrix memory (B,H,dk,dv)
+            _, B, H, dk, _ = shape
+            if H % model_sz == 0:
+                spec = P(None, batch_ax(B), "model", None, None)
+            elif dk % model_sz == 0:
+                # shard the matrix memory's key dim: q.S contracts over it
+                # (small psum) and the k-outer-product update keeps it local
+                spec = P(None, batch_ax(B), None, "model", None)
+            else:
+                spec = P(None, batch_ax(B), None, None, None)
+        elif name == "m" and nd == 3:
+            _, B, H = shape
+            spec = P(None, batch_ax(B),
+                     "model" if H % model_sz == 0 else None)
+        elif nd == 3:                   # slstm c/n/h/m: (periods, B, d_inner)
+            _, B, C = shape
+            spec = P(None, batch_ax(B), None,
+                     ) if C % model_sz else P(None, batch_ax(B), "model")
+        else:
+            spec = P(*([None] * nd))
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def batch_sharding(mesh, global_batch: int):
+    """Sharding spec for a batch-leading input tensor."""
+    dp = data_axes(mesh)
+    total = 1
+    for a in dp:
+        total *= axis_size(mesh, a)
+    if global_batch % total == 0:
+        return dp if len(dp) > 1 else dp[0]
+    if global_batch % axis_size(mesh, "data") == 0:
+        return "data"
+    return None
+
+
+def input_shardings(mesh, shapes_tree, global_batch: int):
+    """Shard every input leaf on its leading (batch) dim."""
+    ax = batch_sharding(mesh, global_batch)
+
+    def one(leaf):
+        spec = [None] * len(leaf.shape)
+        if len(leaf.shape) >= 1 and ax is not None:
+            spec[0] = ax
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree.map(one, shapes_tree)

@@ -1,0 +1,50 @@
+"""The three jit-able production step functions per architecture:
+train_step / prefill_step / serve_step (single-token decode).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import LM
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import make_train_step
+
+
+def build_train_step(cfg: ModelConfig, remat: bool = True):
+    model = LM(cfg)
+    step = make_train_step(model, AdamWConfig(), remat=remat)
+
+    def train_step(params, opt_state, tokens, labels, mask, embeds=None):
+        return step(params, opt_state, tokens, labels, mask, embeds=embeds)
+
+    return model, train_step
+
+
+def build_prefill_step(cfg: ModelConfig, seq_len: int, window_override="cfg"):
+    model = LM(cfg)
+
+    def prefill_step(params, tokens, embeds=None):
+        out = model.forward(params, tokens, embeds, remat=False,
+                            window_override=window_override,
+                            return_cache_len=seq_len)
+        logits = model.logits(params, out.hidden[:, -1])
+        return logits, out.cache
+
+    return model, prefill_step
+
+
+def build_serve_step(cfg: ModelConfig, window_override="cfg",
+                     seq_parallel=None):
+    model = LM(cfg)
+
+    def serve_step(params, cache, tokens, pos):
+        logits, new_cache = model.decode_step(
+            params, tokens, pos, cache, window_override=window_override,
+            seq_parallel=seq_parallel)
+        # greedy next token on-device (production decode loop shape)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return logits, next_tok, new_cache
+
+    return model, serve_step

@@ -1,0 +1,1 @@
+from repro.memory.block_manager import BlockManager  # noqa: F401

@@ -1,0 +1,50 @@
+"""Paged KV block (page) allocator — the vLLM-style memory manager.
+
+Pages are fixed-size token slots in the global KV pools; the allocator is
+pure host-side bookkeeping (free list + refcounts for future prefix
+sharing). The scheduler reasons in tokens; the engine converts to pages.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+
+class BlockManager:
+    def __init__(self, n_pages: int, page_size: int):
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self._free: List[int] = list(range(n_pages - 1, -1, -1))
+        self._refs = [0] * n_pages
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def free_tokens(self) -> int:
+        return self.num_free * self.page_size
+
+    def allocate(self, n: int = 1) -> Optional[List[int]]:
+        """Allocate n pages or None if they don't all fit (no partial)."""
+        if n > len(self._free):
+            return None
+        out = [self._free.pop() for _ in range(n)]
+        for p in out:
+            self._refs[p] = 1
+        return out
+
+    def free(self, pages) -> None:
+        for p in pages:
+            assert self._refs[p] > 0, f"double free of page {p}"
+            self._refs[p] -= 1
+            if self._refs[p] == 0:
+                self._free.append(p)
+
+    def fork(self, pages) -> None:
+        """Refcount bump for copy-on-write prefix sharing."""
+        for p in pages:
+            assert self._refs[p] > 0
+            self._refs[p] += 1
+
+    def pages_for_tokens(self, tokens: int) -> int:
+        return -(-tokens // self.page_size)

@@ -1,0 +1,1 @@
+from repro.models.model import LM, ForwardOut  # noqa: F401

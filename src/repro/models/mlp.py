@@ -1,0 +1,25 @@
+"""Dense FFN (SwiGLU / GeGLU / plain)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FFNCfg
+from repro.models.common import activation_fn, dense_init
+
+
+def init_mlp(key, d_model: int, f: FFNCfg, dtype):
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], (d_model, f.d_ff), dtype=dtype),
+         "w_down": dense_init(ks[1], (f.d_ff, d_model), dtype=dtype)}
+    if f.gated:
+        p["w_gate"] = dense_init(ks[2], (d_model, f.d_ff), dtype=dtype)
+    return p
+
+
+def mlp_forward(p, f: FFNCfg, x):
+    act = activation_fn(f.activation)
+    up = jnp.einsum("...d,df->...f", x, p["w_up"])
+    h = act(jnp.einsum("...d,df->...f", x, p["w_gate"])) * up if f.gated \
+        else act(up)
+    return jnp.einsum("...f,fd->...d", h, p["w_down"])

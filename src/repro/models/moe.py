@@ -1,0 +1,102 @@
+"""Fine-grained MoE (DeepSeek style): shared experts + routed top-k experts
+with capacity-bounded scatter dispatch.
+
+Dispatch is scatter/gather based (no (T, E, C) one-hot einsum): token->slot
+indices are computed per *group* (a group is one sequence for full-sequence
+passes, or the whole batch for decode), tokens are scattered into an
+(E, C, d) buffer, experts run as a single batched einsum, and results are
+gathered back weighted by the router gates. Expert weights carry a leading
+E axis so expert parallelism is a PartitionSpec on that axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FFNCfg
+from repro.models.common import activation_fn, dense_init
+
+
+def init_moe(key, d_model: int, f: FFNCfg, dtype):
+    ks = jax.random.split(key, 5)
+    E, fe = f.n_routed_experts, f.d_ff_expert
+    p = {
+        "router": dense_init(ks[0], (d_model, E), dtype=jnp.float32),
+        "we_gate": dense_init(ks[1], (E, d_model, fe), in_axis=1, dtype=dtype),
+        "we_up": dense_init(ks[2], (E, d_model, fe), in_axis=1, dtype=dtype),
+        "we_down": dense_init(ks[3], (E, fe, d_model), in_axis=1, dtype=dtype),
+    }
+    if f.n_shared_experts:
+        fs = f.n_shared_experts * fe
+        kss = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(kss[0], (d_model, fs), dtype=dtype),
+            "w_up": dense_init(kss[1], (d_model, fs), dtype=dtype),
+            "w_down": dense_init(kss[2], (fs, d_model), dtype=dtype),
+        }
+    return p
+
+
+def _capacity(tokens_per_group: int, f: FFNCfg) -> int:
+    c = int(tokens_per_group * f.top_k * f.capacity_factor
+            / f.n_routed_experts) + 1
+    return max(c, f.top_k)  # never below top_k slots
+
+
+def _dispatch_group(x, gates_idx, gates_w, E: int, C: int):
+    """x: (T, d); gates_idx/gates_w: (T, k). Returns (buffer (E, C, d),
+    slot (T, k), valid (T, k))."""
+    T, d = x.shape
+    k = gates_idx.shape[-1]
+    flat_e = gates_idx.reshape(T * k)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)          # (T*k, E)
+    pos = jnp.cumsum(onehot, axis=0) - onehot                     # pos in expert
+    pos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    valid = pos < C
+    slot = jnp.where(valid, flat_e * C + pos, E * C)              # overflow bin
+    xk = jnp.repeat(x, k, axis=0)                                 # (T*k, d)
+    buf = jnp.zeros((E * C + 1, d), x.dtype).at[slot].add(
+        jnp.where(valid[:, None], xk, 0))
+    return buf[:-1].reshape(E, C, d), slot.reshape(T, k), valid.reshape(T, k)
+
+
+def moe_forward(p, f: FFNCfg, x):
+    """x: (B, T, d) -> (out (B, T, d), aux_loss scalar).
+
+    Each batch row is a dispatch group; router runs in fp32.
+    """
+    B, T, d = x.shape
+    E, k = f.n_routed_experts, f.top_k
+    C = _capacity(T, f)
+    act = activation_fn(f.activation)
+
+    logits = jnp.einsum("btd,de->bte", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_idx = jax.lax.top_k(probs, k)                    # (B, T, k)
+    gate_w = (gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+              ).astype(x.dtype)
+
+    # Switch-style load-balance aux loss (per group, then averaged).
+    me = jnp.mean(probs, axis=1)                                  # (B, E)
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[..., 0], E, dtype=jnp.float32),
+                  axis=1)                                         # top-1 usage
+    aux = E * jnp.mean(jnp.sum(me * ce, axis=-1)) * f.router_aux_loss_coef
+
+    def per_group(xg, gi, gw):
+        buf, slot, valid = _dispatch_group(xg, gi, gw, E, C)      # (E, C, d)
+        h = act(jnp.einsum("ecd,edf->ecf", buf, p["we_gate"])) * \
+            jnp.einsum("ecd,edf->ecf", buf, p["we_up"])
+        out_buf = jnp.einsum("ecf,efd->ecd", h, p["we_down"])
+        flat = jnp.concatenate(
+            [out_buf.reshape(E * C, d), jnp.zeros((1, d), out_buf.dtype)])
+        picked = flat[slot]                                       # (T, k, d)
+        picked = jnp.where(valid[..., None], picked, 0)
+        return jnp.einsum("tkd,tk->td", picked, gw.astype(picked.dtype))
+
+    routed = jax.vmap(per_group)(x, gate_idx, gate_w)
+    if f.n_shared_experts:
+        s = p["shared"]
+        up = jnp.einsum("btd,df->btf", x, s["w_up"])
+        h = act(jnp.einsum("btd,df->btf", x, s["w_gate"])) * up
+        routed = routed + jnp.einsum("btf,fd->btd", h, s["w_down"])
+    return routed, aux

@@ -1,0 +1,434 @@
+"""SSM family: a shared chunkwise-parallel gated-linear-attention (GLA) core
+used by both Mamba2 (SSD form) and xLSTM's mLSTM (matrix memory), plus the
+truly recurrent sLSTM cell.
+
+Recurrence (per batch, head):   S_t = a_t * S_{t-1} + k_t v_t^T
+                                y_t = q_t @ S_t
+with a_t in (0, 1] a scalar decay. The chunkwise form processes chunks of
+``c`` steps with an intra-chunk quadratic part and an inter-chunk
+``lax.scan`` over states — O(T*c) compute, O(c^2) live memory, and the exact
+same numbers as the step form (validated by tests and by the decode path).
+
+mLSTM adds exponential input gating + a normalizer; both are folded into the
+same core: the input gate scales k (with a max-plus associative-scan
+stabilizer m_t = max(log_f_t + m_{t-1}, i_t)) and the normalizer is an extra
+all-ones value channel.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMCfg
+from repro.models.common import dense_init, rms_norm
+
+
+# ==========================================================================
+# Core: chunkwise gated linear attention
+# ==========================================================================
+
+def chunked_gla(q, k, v, log_a, chunk: int, initial_state=None):
+    """q, k: (B, H, T, dk); v: (B, H, T, dv); log_a: (B, H, T) with
+    log_a <= 0. Returns (y (B, H, T, dv), final_state (B, H, dk, dv))."""
+    B, H, T, dk = q.shape
+    dv = v.shape[-1]
+    c = min(chunk, T)
+    n = -(-T // c)
+    pad = n * c - T
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        log_a = jnp.pad(log_a, ((0, 0), (0, 0), (0, pad)))  # a=1, kv=0: no-op
+
+    f32 = jnp.float32
+    qc = q.reshape(B, H, n, c, dk).transpose(2, 0, 1, 3, 4).astype(f32)
+    kc = k.reshape(B, H, n, c, dk).transpose(2, 0, 1, 3, 4).astype(f32)
+    vc = v.reshape(B, H, n, c, dv).transpose(2, 0, 1, 3, 4).astype(f32)
+    lac = log_a.reshape(B, H, n, c).transpose(2, 0, 1, 3).astype(f32)
+    causal = jnp.tril(jnp.ones((c, c), bool))
+
+    if initial_state is None:
+        S0 = jnp.zeros((B, H, dk, dv), f32)
+    else:
+        S0 = initial_state.astype(f32)
+
+    def body(S, inp):
+        qb, kb, vb, la = inp
+        lb = jnp.cumsum(la, axis=-1)                       # inclusive cumsum
+        # intra-chunk: D_ij = exp(lb_i - lb_j), j <= i
+        D = jnp.exp(lb[..., :, None] - lb[..., None, :])
+        D = jnp.where(causal, D, 0.0)
+        att = jnp.einsum("bhid,bhjd->bhij", qb, kb) * D
+        y = jnp.einsum("bhij,bhjv->bhiv", att, vb)
+        # inter-chunk contribution from carried state
+        y = y + jnp.exp(lb)[..., None] * jnp.einsum("bhid,bhdv->bhiv", qb, S)
+        # state update to end of chunk
+        decay_to_end = jnp.exp(lb[..., -1:] - lb)          # (B, H, c)
+        U = jnp.einsum("bhjd,bhjv->bhdv", kb * decay_to_end[..., None], vb)
+        S_new = jnp.exp(lb[..., -1])[..., None, None] * S + U
+        return S_new, y
+
+    S_final, ys = jax.lax.scan(body, S0, (qc, kc, vc, lac))
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(B, H, n * c, dv)[:, :, :T]
+    return y.astype(v.dtype), S_final
+
+
+def gla_step(S, q, k, v, log_a):
+    """Single decode step. S: (B, H, dk, dv); q, k: (B, H, dk); v: (B, H, dv);
+    log_a: (B, H). Returns (y (B, H, dv), S_new)."""
+    f32 = jnp.float32
+    S = S.astype(f32)
+    a = jnp.exp(log_a.astype(f32))[..., None, None]
+    S_new = a * S + jnp.einsum("bhk,bhv->bhkv", k.astype(f32), v.astype(f32))
+    y = jnp.einsum("bhk,bhkv->bhv", q.astype(f32), S_new)
+    return y.astype(v.dtype), S_new
+
+
+def _maxplus_scan(log_f, i_tilde, m0):
+    """m_t = max(m_{t-1} + log_f_t, i_tilde_t) via associative scan.
+
+    Composition of (alpha, beta) |-> m = max(m_prev + alpha, beta):
+      (a1,b1) then (a2,b2) == (a1+a2, max(b1+a2, b2)).
+    log_f, i_tilde: (..., T); m0: (...,). Returns m (..., T).
+    """
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 + a2, jnp.maximum(b1 + a2, b2)
+
+    alpha, beta = jax.lax.associative_scan(combine, (log_f, i_tilde), axis=-1)
+    return jnp.maximum(m0[..., None] + alpha, beta)
+
+
+# ==========================================================================
+# Causal depthwise conv (mamba2 / mLSTM front conv)
+# ==========================================================================
+
+def causal_conv(x, w, b, history=None):
+    """x: (B, T, C); w: (width, C) depthwise; causal (left) padding, or the
+    previous chunk's tail (B, width-1, C) when continuing a sequence."""
+    width = w.shape[0]
+    if history is None:
+        xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([history.astype(x.dtype), x], axis=1)
+    out = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32), w[:, None, :].astype(jnp.float32),
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NTC", "TIO", "NTC"),
+        feature_group_count=x.shape[-1])
+    return (out + b).astype(x.dtype)
+
+
+def causal_conv_step(conv_state, x_new, w, b):
+    """conv_state: (B, width-1, C) past inputs; x_new: (B, C)."""
+    window = jnp.concatenate([conv_state, x_new[:, None]], axis=1)
+    out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                     w.astype(jnp.float32)) + b
+    return out.astype(x_new.dtype), window[:, 1:]
+
+
+# ==========================================================================
+# Mamba2 block (SSD)
+# ==========================================================================
+
+def init_mamba2(key, d_model: int, s: SSMCfg, dtype):
+    d_inner = s.expand * d_model
+    conv_dim = d_inner + 2 * s.d_state
+    ks = jax.random.split(key, 4)
+    H = s.n_heads
+    return {
+        "w_in": dense_init(ks[0], (d_model, 2 * d_inner + 2 * s.d_state + H),
+                           dtype=dtype),
+        "conv_w": dense_init(ks[1], (s.d_conv, conv_dim), in_axis=0,
+                             dtype=dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), math.log(math.e - 1), jnp.float32),
+        "gate_norm": jnp.zeros((d_inner,), dtype),
+        "w_out": dense_init(ks[3], (d_inner, d_model), dtype=dtype),
+    }
+
+
+def _mamba2_split(p, s: SSMCfg, d_model, zxbcdt):
+    d_inner = s.expand * d_model
+    z, xBC, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * s.d_state],
+                           axis=-1)
+    return z, xBC, dt
+
+
+def _mamba2_ssm_inputs(p, s: SSMCfg, xBC, dt, d_inner):
+    """xBC: (..., conv_dim) post-conv; dt: (..., H)."""
+    H = s.n_heads
+    hd = d_inner // H
+    x_in, Bmat, Cmat = jnp.split(xBC, [d_inner, d_inner + s.d_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    log_a = -jnp.exp(p["A_log"]) * dt                     # (..., H)
+    xh = x_in.reshape(*x_in.shape[:-1], H, hd)
+    v = xh * dt[..., None]
+    return x_in, xh, Bmat, Cmat, v, log_a
+
+
+def mamba2_forward(p, s: SSMCfg, d_model: int, x, initial_state=None):
+    """x: (B, T, d). Returns (out, state {"conv", "ssm"})."""
+    B, T, _ = x.shape
+    d_inner = s.expand * d_model
+    H, hd = s.n_heads, d_inner // s.n_heads
+    zxbcdt = jnp.einsum("btd,de->bte", x, p["w_in"])
+    z, xBC, dt = _mamba2_split(p, s, d_model, zxbcdt)
+    conv_hist = None if initial_state is None else initial_state["conv"]
+    ssm_init = None if initial_state is None else initial_state["ssm"]
+    pre_conv = xBC if conv_hist is None else \
+        jnp.concatenate([conv_hist.astype(xBC.dtype), xBC], axis=1)
+    conv_tail = pre_conv[:, max(0, pre_conv.shape[1] - (s.d_conv - 1)):]
+    xBC = jax.nn.silu(causal_conv(xBC, p["conv_w"], p["conv_b"], conv_hist))
+    x_in, xh, Bmat, Cmat, v, log_a = _mamba2_ssm_inputs(p, s, xBC, dt, d_inner)
+    q = jnp.broadcast_to(Cmat[:, None], (B, H, T, s.d_state))
+    k = jnp.broadcast_to(Bmat[:, None], (B, H, T, s.d_state))
+    vh = v.transpose(0, 2, 1, 3)                           # (B, H, T, hd)
+    la = log_a.transpose(0, 2, 1)                          # (B, H, T)
+    y, S = chunked_gla(q, k, vh, la, s.chunk_size, ssm_init)
+    y = y.transpose(0, 2, 1, 3) + p["D"][:, None] * xh     # (B, T, H, hd)
+    y = y.reshape(B, T, d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["gate_norm"])
+    out = jnp.einsum("bte,ed->btd", y, p["w_out"])
+    pad_t = max(0, s.d_conv - 1 - conv_tail.shape[1])
+    conv_state = jnp.pad(conv_tail, ((0, 0), (pad_t, 0), (0, 0)))
+    return out, {"conv": conv_state, "ssm": S}
+
+
+def mamba2_decode(p, s: SSMCfg, d_model: int, x, state):
+    """x: (B, d); state {"conv": (B, w-1, conv_dim), "ssm": (B,H,dk,hd)}."""
+    B, _ = x.shape
+    d_inner = s.expand * d_model
+    H = s.n_heads
+    zxbcdt = jnp.einsum("bd,de->be", x, p["w_in"])
+    z, xBC, dt = _mamba2_split(p, s, d_model, zxbcdt)
+    xBC, conv_state = causal_conv_step(state["conv"], xBC, p["conv_w"],
+                                       p["conv_b"])
+    xBC = jax.nn.silu(xBC)
+    x_in, xh, Bmat, Cmat, v, log_a = _mamba2_ssm_inputs(p, s, xBC, dt, d_inner)
+    q = jnp.broadcast_to(Cmat[:, None], (B, H, s.d_state))
+    k = jnp.broadcast_to(Bmat[:, None], (B, H, s.d_state))
+    y, S = gla_step(state["ssm"], q, k, v, log_a)          # (B, H, hd)
+    y = y + p["D"][:, None] * xh
+    y = y.reshape(B, d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["gate_norm"])
+    return jnp.einsum("be,ed->bd", y, p["w_out"]), {"conv": conv_state,
+                                                    "ssm": S}
+
+
+def mamba2_state_shapes(s: SSMCfg, d_model: int, batch: int, dtype):
+    d_inner = s.expand * d_model
+    H, hd = s.n_heads, d_inner // s.n_heads
+    return {"conv": jnp.zeros((batch, s.d_conv - 1, d_inner + 2 * s.d_state),
+                              dtype),
+            "ssm": jnp.zeros((batch, H, s.d_state, hd), jnp.float32)}
+
+
+# ==========================================================================
+# mLSTM block (xLSTM matrix memory)
+# ==========================================================================
+
+def init_mlstm(key, d_model: int, s: SSMCfg, dtype):
+    d_inner = s.expand * d_model
+    ks = jax.random.split(key, 7)
+    H = s.n_heads
+    return {
+        "w_up": dense_init(ks[0], (d_model, 2 * d_inner), dtype=dtype),
+        "conv_w": dense_init(ks[1], (s.d_conv, d_inner), in_axis=0, dtype=dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "w_q": dense_init(ks[2], (d_inner, d_inner), dtype=dtype),
+        "w_k": dense_init(ks[3], (d_inner, d_inner), dtype=dtype),
+        "w_v": dense_init(ks[4], (d_inner, d_inner), dtype=dtype),
+        "w_if": dense_init(ks[5], (d_inner, 2 * H), dtype=jnp.float32),
+        "b_i": jnp.zeros((H,), jnp.float32),
+        "b_f": jnp.full((H,), 3.0, jnp.float32),   # bias toward remembering
+        "head_norm": jnp.zeros((d_inner,), dtype),
+        "w_down": dense_init(ks[6], (d_inner, d_model), dtype=dtype),
+    }
+
+
+def _mlstm_gates(p, x_branch):
+    gf = jnp.einsum("...e,eg->...g", x_branch.astype(jnp.float32), p["w_if"])
+    H = p["b_i"].shape[0]
+    i_tilde = gf[..., :H] + p["b_i"]
+    log_f = jax.nn.log_sigmoid(gf[..., H:] + p["b_f"])
+    return i_tilde, log_f
+
+
+def mlstm_forward(p, s: SSMCfg, d_model: int, x, initial_state=None):
+    """x: (B, T, d). State: {"conv", "S" (B,H,dk,hd+1), "m" (B,H)}."""
+    B, T, _ = x.shape
+    d_inner = s.expand * d_model
+    H, hd = s.n_heads, d_inner // s.n_heads
+    up = jnp.einsum("btd,de->bte", x, p["w_up"])
+    x_branch, z = jnp.split(up, 2, axis=-1)
+    conv_hist = None if initial_state is None else initial_state["conv"]
+    pre_conv = x_branch if conv_hist is None else \
+        jnp.concatenate([conv_hist.astype(x_branch.dtype), x_branch], axis=1)
+    conv_tail = pre_conv[:, max(0, pre_conv.shape[1] - (s.d_conv - 1)):]
+    xc = jax.nn.silu(causal_conv(x_branch, p["conv_w"], p["conv_b"],
+                                 conv_hist))
+    q = jnp.einsum("bte,ef->btf", xc, p["w_q"]).reshape(B, T, H, hd)
+    k = jnp.einsum("bte,ef->btf", xc, p["w_k"]).reshape(B, T, H, hd)
+    v = jnp.einsum("bte,ef->btf", x_branch, p["w_v"]).reshape(B, T, H, hd)
+    k = k / math.sqrt(hd)
+    i_tilde, log_f = _mlstm_gates(p, x_branch)             # (B, T, H)
+    i_tilde = i_tilde.transpose(0, 2, 1)
+    log_f = log_f.transpose(0, 2, 1)                       # (B, H, T)
+
+    if initial_state is None:
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+        S0 = None
+    else:
+        m0 = initial_state["m"]
+        S0 = initial_state["S"]
+    m = _maxplus_scan(log_f, i_tilde, m0)                  # (B, H, T)
+    m_prev = jnp.concatenate([m0[..., None], m[..., :-1]], axis=-1)
+    # Clamp: exp(-30) ~ 1e-13 is already a hard zero for f32 accumulators,
+    # and an unclamped -1e30 (the "no history" stabilizer) would absorb the
+    # following small decays inside chunked_gla's cumsum (float addition).
+    log_a = jnp.maximum(log_f + m_prev - m, -30.0)         # <= 0
+    i_eff = jnp.exp(i_tilde - m)                           # stabilized gate
+
+    qh = q.transpose(0, 2, 1, 3)
+    kh = k.transpose(0, 2, 1, 3) * i_eff[..., None]
+    vh = v.transpose(0, 2, 1, 3)
+    v_aug = jnp.concatenate([vh, jnp.ones_like(vh[..., :1])], axis=-1)
+    y_aug, S = chunked_gla(qh, kh, v_aug, log_a, s.chunk_size, S0)
+    num, den = y_aug[..., :hd], y_aug[..., hd]
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m))[..., None]
+    h = h.transpose(0, 2, 1, 3).reshape(B, T, d_inner)
+    h = rms_norm(h, p["head_norm"])
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(h.dtype)
+    out = jnp.einsum("bte,ed->btd", h, p["w_down"])
+    pad_t = max(0, s.d_conv - 1 - conv_tail.shape[1])
+    conv_state = jnp.pad(conv_tail, ((0, 0), (pad_t, 0), (0, 0)))
+    return out, {"conv": conv_state, "S": S, "m": m[..., -1]}
+
+
+def mlstm_decode(p, s: SSMCfg, d_model: int, x, state):
+    B, _ = x.shape
+    d_inner = s.expand * d_model
+    H, hd = s.n_heads, d_inner // s.n_heads
+    up = jnp.einsum("bd,de->be", x, p["w_up"])
+    x_branch, z = jnp.split(up, 2, axis=-1)
+    xc, conv_state = causal_conv_step(state["conv"], x_branch, p["conv_w"],
+                                      p["conv_b"])
+    xc = jax.nn.silu(xc)
+    q = jnp.einsum("be,ef->bf", xc, p["w_q"]).reshape(B, H, hd)
+    k = jnp.einsum("be,ef->bf", xc, p["w_k"]).reshape(B, H, hd) / math.sqrt(hd)
+    v = jnp.einsum("be,ef->bf", x_branch, p["w_v"]).reshape(B, H, hd)
+    i_tilde, log_f = _mlstm_gates(p, x_branch)             # (B, H)
+    m_prev = state["m"]
+    m = jnp.maximum(log_f + m_prev, i_tilde)
+    log_a = jnp.maximum(log_f + m_prev - m, -30.0)  # match forward's clamp
+    i_eff = jnp.exp(i_tilde - m)
+    v_aug = jnp.concatenate([v, jnp.ones_like(v[..., :1])], axis=-1)
+    y_aug, S = gla_step(state["S"], q, k * i_eff[..., None], v_aug, log_a)
+    num, den = y_aug[..., :hd], y_aug[..., hd]
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m))[..., None]
+    h = h.reshape(B, d_inner)
+    h = rms_norm(h, p["head_norm"])
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(h.dtype)
+    return jnp.einsum("be,ed->bd", h, p["w_down"]), {"conv": conv_state,
+                                                     "S": S, "m": m}
+
+
+def mlstm_state_shapes(s: SSMCfg, d_model: int, batch: int, dtype):
+    d_inner = s.expand * d_model
+    H, hd = s.n_heads, d_inner // s.n_heads
+    return {"conv": jnp.zeros((batch, s.d_conv - 1, d_inner), dtype),
+            "S": jnp.zeros((batch, H, hd, hd + 1), jnp.float32),
+            "m": jnp.full((batch, H), -1e30, jnp.float32)}
+
+
+# ==========================================================================
+# sLSTM block (scalar memory, true recurrence)
+# ==========================================================================
+
+def init_slstm(key, d_model: int, s: SSMCfg, dtype):
+    d_inner = s.expand * d_model
+    H, hd = s.n_heads, (s.expand * d_model) // s.n_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "w_x": dense_init(ks[0], (d_model, 4 * d_inner), dtype=dtype),
+        "r": dense_init(ks[1], (H, hd, 4 * hd), in_axis=1, dtype=dtype),
+        "b": jnp.concatenate([jnp.zeros((d_inner,)), jnp.full((d_inner,), 3.0),
+                              jnp.zeros((2 * d_inner,))]).astype(jnp.float32),
+        "w_out": dense_init(ks[2], (d_inner, d_model), dtype=dtype),
+    }
+    if s.ff_mult:
+        d_ff = int(s.ff_mult * d_inner)
+        kf = jax.random.split(ks[3], 2)
+        p["ff"] = {"w_up": dense_init(kf[0], (d_inner, d_ff), dtype=dtype),
+                   "w_down": dense_init(kf[1], (d_ff, d_inner), dtype=dtype)}
+    return p
+
+
+def _slstm_step(p, s: SSMCfg, d_inner, gx, state):
+    """gx: (B, 4*d_inner) input-side gate preactivations (no bias yet)."""
+    H, hd = s.n_heads, d_inner // s.n_heads
+    c, n, h, m = state
+    B = gx.shape[0]
+    hr = h.reshape(B, H, hd)
+    gr = jnp.einsum("bhk,hkg->bhg", hr.astype(jnp.float32),
+                    p["r"].astype(jnp.float32)).reshape(B, 4 * d_inner)
+    g = gx.astype(jnp.float32) + gr + p["b"]
+    i_t, f_t, z_t, o_t = jnp.split(g, 4, axis=-1)
+    m_new = jnp.maximum(f_t + m, i_t)                      # exp forget gate
+    i_e = jnp.exp(i_t - m_new)
+    f_e = jnp.exp(f_t + m - m_new)
+    c_new = f_e * c + i_e * jnp.tanh(z_t)
+    n_new = f_e * n + i_e
+    h_new = jax.nn.sigmoid(o_t) * c_new / jnp.maximum(n_new, 1e-6)
+    return c_new, n_new, h_new, m_new
+
+
+def slstm_forward(p, s: SSMCfg, d_model: int, x, initial_state=None):
+    """x: (B, T, d). Returns (out, state (c, n, h, m))."""
+    B, T, _ = x.shape
+    d_inner = s.expand * d_model
+    gx = jnp.einsum("btd,dg->btg", x, p["w_x"])            # (B, T, 4*di)
+    if initial_state is None:
+        initial_state = slstm_state_shapes(s, d_model, B, jnp.float32)
+    state0 = tuple(initial_state[k] for k in ("c", "n", "h", "m"))
+
+    def body(state, gx_t):
+        new = _slstm_step(p, s, d_inner, gx_t, state)
+        return new, new[2]
+
+    state_f, hs = jax.lax.scan(body, state0, gx.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2).astype(x.dtype)              # (B, T, d_inner)
+    if "ff" in p:
+        h = h + jnp.einsum("btf,fe->bte", jax.nn.gelu(
+            jnp.einsum("bte,ef->btf", h, p["ff"]["w_up"])), p["ff"]["w_down"])
+    out = jnp.einsum("bte,ed->btd", h, p["w_out"])
+    c, n, hh, m = state_f
+    return out, {"c": c, "n": n, "h": hh, "m": m}
+
+
+def slstm_decode(p, s: SSMCfg, d_model: int, x, state):
+    d_inner = s.expand * d_model
+    gx = jnp.einsum("bd,dg->bg", x, p["w_x"])
+    st = tuple(state[k] for k in ("c", "n", "h", "m"))
+    c, n, h, m = _slstm_step(p, s, d_inner, gx, st)
+    hh = h.astype(x.dtype)
+    if "ff" in p:
+        hh = hh + jnp.einsum("bf,fe->be", jax.nn.gelu(
+            jnp.einsum("be,ef->bf", hh, p["ff"]["w_up"])), p["ff"]["w_down"])
+    out = jnp.einsum("be,ed->bd", hh, p["w_out"])
+    return out, {"c": c, "n": n, "h": h, "m": m}
+
+
+def slstm_state_shapes(s: SSMCfg, d_model: int, batch: int, dtype):
+    d_inner = s.expand * d_model
+    z = jnp.zeros((batch, d_inner), jnp.float32)
+    return {"c": z, "n": z + 1e-6, "h": z, "m": z - 1e30}

@@ -1,0 +1,1 @@
+from repro.serving import workloads  # noqa: F401

@@ -1,0 +1,53 @@
+"""Augmentation ("API") executor.
+
+In production this component performs the actual tool / model / human
+round-trip (the paper's API executor, Fig. 6). Here the six augmentation
+types are deterministic stubs: completion times come from the request
+script (Table-1-calibrated), and returned tokens are a deterministic
+function of (rid, segment) so that serving runs are exactly reproducible
+across scheduling policies — the basis of the policy-equivalence tests.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.request import Interception, Request
+
+
+def returned_token_ids(rid: int, seg_idx: int, n: int, vocab: int) -> np.ndarray:
+    rng = np.random.default_rng((rid * 1_000_003 + seg_idx * 7919) % 2**31)
+    return rng.integers(0, vocab, size=n, dtype=np.int64)
+
+
+def prompt_token_ids(rid: int, n: int, vocab: int) -> np.ndarray:
+    rng = np.random.default_rng((rid * 2_654_435_761 + 17) % 2**31)
+    return rng.integers(0, vocab, size=n, dtype=np.int64)
+
+
+class APIExecutor:
+    """Tracks in-flight interceptions and their (virtual-time) completions."""
+
+    def __init__(self, vocab: int):
+        self.vocab = vocab
+        self.inflight = {}   # rid -> (completion_time, req, interception)
+
+    def launch(self, req: Request, intc: Interception, now: float):
+        self.inflight[req.rid] = (now + intc.duration, req, intc)
+
+    def completions(self, now: float):
+        """Pop all interceptions completed by ``now``; returns
+        [(req, returned_token_ids)] in completion order."""
+        done = sorted((t, rid) for rid, (t, _, _) in self.inflight.items()
+                      if t <= now)
+        out = []
+        for _, rid in done:
+            _, req, intc = self.inflight.pop(rid)
+            toks = returned_token_ids(req.rid, req.seg_idx,
+                                      intc.returned_tokens, self.vocab)
+            out.append((req, toks))
+        return out
+
+    def next_completion_time(self):
+        if not self.inflight:
+            return None
+        return min(t for t, _, _ in self.inflight.values())

@@ -1,0 +1,399 @@
+"""The real continuous-batching serving engine.
+
+Executes the InferCept scheduler's per-iteration plans on an actual JAX
+model with paged KV storage:
+
+  * KV lives in global paged pools (one pytree mirroring the model's cache
+    structure, page-indexed); a BlockManager allocates pages; per-request
+    block tables map logical positions to pages.
+  * decode        — batched single-token step over gathered page views
+  * chunks        — chunked prefill / recomputation via LM.extend_step
+  * swap_out/in   — page-granular HBM<->host movement (numpy backing),
+                    the budgeted pipelined swap of §4.1
+  * discard/evict — pages freed via the scheduler's on_discard hook
+
+Time is virtual (the same cost model as the simulator) so interception
+durations and swap budgets are exact and runs are reproducible; tensor math
+is real. On TPU the decode gather is replaced by the Pallas paged-attention
+kernel (repro.kernels); on this CPU demo path the gather itself is the
+XLA fallback. Generated tokens are greedy-argmax, so runs across scheduling
+policies must produce IDENTICAL token streams — the strongest end-to-end
+correctness property of the stack (tested).
+
+Scope: attention-cache architectures (the paper's scope). SSM-state archs
+are served by the slot engine in examples/ (their state is O(1) per request
+and trivially preserved; see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.costmodel import CostModel
+from repro.core.estimator import DurationEstimator
+from repro.core.policy import PolicyConfig
+from repro.core.request import Phase, Request
+from repro.core.scheduler import Scheduler
+from repro.memory.block_manager import BlockManager
+from repro.models import LM
+from repro.serving.api_executor import (APIExecutor, prompt_token_ids)
+from repro.utils.hw import TPU_V5E
+
+
+@dataclasses.dataclass
+class ReqKV:
+    tokens: List[int]                       # all known token ids
+    pages: List[object]                     # ("dev", pid) | ("host", np tree)
+    computed: int = 0                       # KV tokens materialized (prefix)
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, policy: PolicyConfig, *,
+                 page_size: int = 16, n_pages: int = 256,
+                 max_model_len: int = 512, seed: int = 0,
+                 estimator: Optional[DurationEstimator] = None,
+                 dtype=jnp.float32):
+        for blk in cfg.blocks:
+            assert blk.kind in ("attn", "shared_attn"), \
+                "paged engine serves attention-cache architectures"
+        self.cfg = cfg
+        self.model = LM(cfg)
+        self.params = self.model.init(jax.random.PRNGKey(seed), dtype=dtype)
+        self.page = page_size
+        # fixed per-request page-table width -> stable jit shapes
+        self.max_pages = -(-max_model_len // page_size)
+        self.pools = self.model.init_cache(n_pages, page_size, dtype=dtype)
+        self.blocks = BlockManager(n_pages, page_size)
+        self.scratch_page = self.blocks.allocate(1)[0]  # dummy-slot target
+        self.cost = CostModel(cfg=cfg, chip=TPU_V5E, n_chips=1)
+        cap = max(page_size, (n_pages - 8) * page_size)
+        self.sched = Scheduler(policy, self.cost, estimator=estimator,
+                               gpu_capacity_tokens=cap)
+        self.sched.on_discard = self._on_discard
+        self.api = APIExecutor(cfg.vocab_size)
+        self.kv: Dict[int, ReqKV] = {}
+        self.now = 0.0
+        self.finished: List[Request] = []
+        self._pending_arrivals = deque()
+        # jitted entry points (stable shapes via bucketing)
+        self._decode_jit = jax.jit(
+            lambda p, t, pos, c: self.model.decode_step(p, t, pos, c))
+        self._extend_jit = jax.jit(
+            lambda p, t, s, c, li: self.model.extend_step(
+                p, t, s, c, logits_index=li))
+
+    @staticmethod
+    def _bucket(n: int) -> int:
+        b = 1
+        while b < n:
+            b *= 2
+        return b
+
+    # ------------------------------------------------------------------
+    # request intake
+    # ------------------------------------------------------------------
+    def add_request(self, req: Request):
+        self._pending_arrivals.append(req)
+        self._pending_arrivals = deque(
+            sorted(self._pending_arrivals, key=lambda r: r.arrival))
+
+    def _admit(self):
+        while self._pending_arrivals and \
+                self._pending_arrivals[0].arrival <= self.now:
+            req = self._pending_arrivals.popleft()
+            toks = prompt_token_ids(req.rid, req.prompt_len,
+                                    self.cfg.vocab_size)
+            self.kv[req.rid] = ReqKV(tokens=list(map(int, toks)), pages=[])
+            self.sched.submit(req)
+
+    # ------------------------------------------------------------------
+    # page plumbing
+    # ------------------------------------------------------------------
+    def _ensure_pages(self, st: ReqKV, upto_tokens: int):
+        need = -(-upto_tokens // self.page)
+        while len(st.pages) < need:
+            got = self.blocks.allocate(1)
+            if got is None:
+                raise RuntimeError("out of KV pages — size the engine up")
+            st.pages.append(("dev", got[0]))
+
+    def _device_page_ids(self, st: ReqKV, n_pages: int) -> List[int]:
+        ids = []
+        for e in st.pages[:n_pages]:
+            assert e is not None and e[0] == "dev", \
+                "request not fully device-resident"
+            ids.append(e[1])
+        return ids
+
+    def _gather_cache(self, blocktables: np.ndarray):
+        """blocktables: (B, P) page ids (pad with 0). Returns a slotted cache
+        view (periods, B, P*page, ...) gathered from the pools."""
+        bt = jnp.asarray(blocktables, jnp.int32)
+        Bsz, P = blocktables.shape
+
+        def g(leaf):
+            out = jnp.take(leaf, bt.reshape(-1), axis=1)
+            out = out.reshape(leaf.shape[0], Bsz, P, self.page,
+                              *leaf.shape[3:])
+            return out.reshape(leaf.shape[0], Bsz, P * self.page,
+                               *leaf.shape[3:])
+        return jax.tree.map(g, self.pools)
+
+    def _scatter_tokens(self, cache, blocktables: np.ndarray,
+                        batch_idx: np.ndarray, positions: np.ndarray,
+                        pad_to: int = 0):
+        """Write cache entries at (batch_idx[i], positions[i]) back into the
+        pools at the pages given by each request's block table. Padded
+        entries (stable jit shapes) are routed to the scratch page."""
+        n = len(positions)
+        pad_to = max(pad_to, n)
+        pids = np.full(pad_to, self.scratch_page, np.int64)
+        offs = np.zeros(pad_to, np.int64)
+        bidx = np.zeros(pad_to, np.int64)
+        pos = np.zeros(pad_to, np.int64)
+        pids[:n] = blocktables[batch_idx, positions // self.page]
+        offs[:n] = positions % self.page
+        bidx[:n] = batch_idx
+        pos[:n] = positions
+        pids = jnp.asarray(pids, jnp.int32)
+        offs = jnp.asarray(offs, jnp.int32)
+        bidx = jnp.asarray(bidx, jnp.int32)
+        pos = jnp.asarray(pos, jnp.int32)
+
+        def s(pool_leaf, cache_leaf):
+            vals = cache_leaf[:, bidx, pos]      # (periods, n, ...)
+            return pool_leaf.at[:, pids, offs].set(vals.astype(pool_leaf.dtype))
+        self.pools = jax.tree.map(s, self.pools, cache)
+
+    # ------------------------------------------------------------------
+    # plan execution
+    # ------------------------------------------------------------------
+    def _on_discard(self, req: Request, n_tokens: int):
+        st = self.kv.get(req.rid)
+        if st is None:
+            return
+        freed = [e[1] for e in st.pages if e is not None and e[0] == "dev"]
+        self.blocks.free(freed)
+        # host prefix survives; discarded device pages are dropped entirely
+        st.pages = st.pages[:-(-req.host_tokens // self.page)] \
+            if req.host_tokens else []
+        st.computed = req.host_tokens
+
+    def _page_align_swaps(self, plan):
+        """Round token-granular swap amounts to page-granular moves."""
+        def aligned_out(req, n):
+            st = self.kv[req.rid]
+            dev_start = req.host_tokens        # host prefix is pages [0, h)
+            first_dev_page = dev_start // self.page
+            moved = 0
+            pages = []
+            p = first_dev_page
+            while moved < n and p * self.page < st.computed:
+                count = min(self.page, st.computed - p * self.page)
+                if moved + count > n and count == self.page:
+                    break                      # don't split full pages
+                pages.append(p)
+                moved += count
+                p += 1
+            return pages, moved
+
+        new_out = []
+        for req, n in plan.swap_out:
+            pages, moved = aligned_out(req, n)
+            if moved:
+                new_out.append((req, moved, pages))
+        plan.swap_out = [(r, n) for r, n, _ in new_out]
+        self._swap_out_pages = {r.rid: p for r, _, p in new_out}
+
+        new_in = []
+        for req, n in plan.swap_in:
+            st = self.kv[req.rid]
+            first_host = next((i for i, e in enumerate(st.pages)
+                               if e is not None and e[0] == "host"), None)
+            if first_host is None:
+                continue
+            moved = 0
+            pages = []
+            p = first_host
+            while moved < n and p < len(st.pages) and \
+                    st.pages[p] is not None and st.pages[p][0] == "host":
+                count = min(self.page,
+                            req.host_tokens + req.device_tokens
+                            - p * self.page)
+                if moved + count > n and count == self.page:
+                    break
+                pages.append(p)
+                moved += count
+                p += 1
+            if moved:
+                new_in.append((req, moved, pages))
+        plan.swap_in = [(r, n) for r, n, _ in new_in]
+        self._swap_in_pages = {r.rid: p for r, _, p in new_in}
+
+    def _exec_swap_out(self, req: Request):
+        st = self.kv[req.rid]
+        for p in self._swap_out_pages.get(req.rid, []):
+            kind, pid = st.pages[p]
+            assert kind == "dev"
+            idx = jnp.asarray(pid, jnp.int32)
+            payload = jax.device_get(
+                jax.tree.map(lambda leaf: jnp.take(leaf, idx, axis=1),
+                             self.pools))
+            st.pages[p] = ("host", payload)
+            self.blocks.free([pid])
+
+    def _exec_swap_in(self, req: Request):
+        st = self.kv[req.rid]
+        for p in self._swap_in_pages.get(req.rid, []):
+            kind, payload = st.pages[p]
+            assert kind == "host"
+            got = self.blocks.allocate(1)
+            if got is None:
+                raise RuntimeError("out of KV pages during swap-in")
+            pid = got[0]
+            idx = jnp.asarray(pid, jnp.int32)
+            self.pools = jax.tree.map(
+                lambda leaf, val: leaf.at[:, idx].set(
+                    jnp.asarray(val, leaf.dtype)),
+                self.pools, payload)
+            st.pages[p] = ("dev", pid)
+
+    def _exec_chunk(self, req: Request, n: int):
+        st = self.kv[req.rid]
+        assert req.host_tokens == 0, "chunks require device-resident prefix"
+        start = st.computed
+        n_pad = max(n, min(self._bucket(n),
+                           self.max_pages * self.page - start))
+        self._ensure_pages(st, start + n)
+        bt = np.full((1, self.max_pages), self.scratch_page, np.int64)
+        ids = self._device_page_ids(st, len(st.pages))
+        bt[0, :len(ids)] = ids
+        cache = self._gather_cache(bt)
+        # pad the chunk to a bucketed length; padding tokens land at
+        # positions > the real range, are causally invisible, and get
+        # overwritten when those positions are actually computed.
+        ids_list = st.tokens[start:start + n] + [0] * (n_pad - n)
+        chunk_ids = jnp.asarray([ids_list], jnp.int32)
+        if self.cfg.n_codebooks:
+            chunk_ids = jnp.broadcast_to(chunk_ids[..., None],
+                                         (1, n_pad, self.cfg.n_codebooks))
+        logits, cache = self._extend_jit(
+            self.params, chunk_ids, jnp.asarray([start], jnp.int32), cache,
+            jnp.asarray([n - 1], jnp.int32))
+        self._scatter_tokens(cache, bt, np.zeros(n, np.int64),
+                             np.arange(start, start + n), pad_to=n_pad)
+        st.computed = start + n
+        # final chunk of a fresh prefill emits the first generated token
+        if st.computed == req.target_ctx and len(st.tokens) == req.target_ctx:
+            st.tokens.append(int(jnp.argmax(
+                np.asarray(logits[0]).reshape(-1, self.cfg.vocab_size)[-1])))
+
+    def _exec_decode(self, reqs: List[Request]):
+        if not reqs:
+            return
+        sts = [self.kv[r.rid] for r in reqs]
+        for r, st in zip(reqs, sts):
+            self._ensure_pages(st, r.target_ctx + 1)
+        B = len(reqs)
+        B_pad = self._bucket(B)   # bucketed batch -> stable jit shapes
+        bt = np.full((B_pad, self.max_pages), self.scratch_page, np.int64)
+        for b, st in enumerate(sts):
+            ids = self._device_page_ids(st, len(st.pages))
+            bt[b, :len(ids)] = ids
+        cache = self._gather_cache(bt)
+        pos = np.zeros(B_pad, np.int64)
+        pos[:B] = [r.target_ctx for r in reqs]
+        feed = np.zeros(B_pad, np.int64)
+        feed[:B] = [st.tokens[p] for st, p in zip(sts, pos[:B])]
+        toks = jnp.asarray(feed, jnp.int32)
+        if self.cfg.n_codebooks:
+            toks = jnp.broadcast_to(toks[:, None],
+                                    (B_pad, self.cfg.n_codebooks))
+        logits, cache = self._decode_jit(
+            self.params, toks, jnp.asarray(pos, jnp.int32), cache)
+        self._scatter_tokens(cache, bt, np.arange(B),
+                             np.asarray(pos[:B]), pad_to=B_pad)
+        self._decode_logits = np.asarray(jax.device_get(logits))[:B]
+        for st, p in zip(sts, pos[:B]):
+            st.computed = int(p) + 1
+
+    # ------------------------------------------------------------------
+    # main loop
+    # ------------------------------------------------------------------
+    def step(self) -> bool:
+        """One scheduler iteration; returns False when fully drained."""
+        self._admit()
+        for req, toks in self.api.completions(self.now):
+            self.kv[req.rid].tokens.extend(map(int, toks))
+            self.sched.notify_resumed(req, self.now)
+
+        plan = self.sched.next_iteration(self.now)
+        if plan.empty:
+            nxts = []
+            if self._pending_arrivals:
+                nxts.append(self._pending_arrivals[0].arrival)
+            t = self.api.next_completion_time()
+            if t is not None:
+                nxts.append(t)
+            if not nxts:
+                return False
+            self.now = max(self.now, min(nxts))
+            return True
+
+        self._page_align_swaps(plan)
+        for req, _ in plan.swap_out:
+            self._exec_swap_out(req)
+        for req, _ in plan.swap_in:
+            self._exec_swap_in(req)
+        for req, n in plan.chunks:
+            self._exec_chunk(req, n)
+        self._exec_decode(plan.decode)
+
+        iter_time = self.cost.t_fwd(max(1, plan.query_tokens),
+                                    plan.context_tokens) + plan.stall_s
+        end = self.now + iter_time
+        decode_reqs = list(plan.decode)
+        events = self.sched.apply_plan(plan, end)
+        intercepted = {r.rid for r, _ in events["intercepted"]}
+        finished = {r.rid for r in events["finished"]}
+        for b, req in enumerate(decode_reqs):
+            if req.rid in intercepted or req.rid in finished:
+                continue
+            self.kv[req.rid].tokens.append(
+                int(np.argmax(self._decode_logits[b].reshape(
+                    -1, self.cfg.vocab_size)[-1])))
+        for req, intc in events["intercepted"]:
+            self.sched.notify_intercepted(req, intc, end)
+            self.api.launch(req, intc, end)
+        for req in events["finished"]:
+            self.finished.append(req)
+            st = self.kv[req.rid]
+            self.blocks.free([e[1] for e in st.pages
+                              if e is not None and e[0] == "dev"])
+            st.pages = []
+        self.now = end
+        return True
+
+    def run(self, max_steps: int = 100000):
+        steps = 0
+        while steps < max_steps:
+            more = (self._pending_arrivals or self.sched.has_work()
+                    or self.api.inflight)
+            if not more:
+                break
+            if not self.step():
+                break
+            steps += 1
+        return self.finished
+
+    # ------------------------------------------------------------------
+    def generated_text(self, req: Request) -> List[int]:
+        """All token ids of a finished request (prompt + gen + returned)."""
+        return list(self.kv[req.rid].tokens)

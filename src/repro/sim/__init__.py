@@ -1,0 +1,1 @@
+from repro.sim.simulator import SimResult, simulate  # noqa: F401

@@ -1,0 +1,151 @@
+"""Discrete-event simulator for intercept-aware serving.
+
+Drives the shared ``repro.core.Scheduler`` with virtual time from the
+analytic cost model — the same T_fwd/T_swap mappings the scheduler itself
+uses (in the paper both come from offline profiling). This is how we
+reproduce the paper's end-to-end experiments (Fig. 2, Fig. 3, the waste
+fractions, and the estimator-vs-oracle comparison) on a CPU-only box.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from collections import deque
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.costmodel import CostModel
+from repro.core.estimator import DurationEstimator
+from repro.core.policy import PolicyConfig
+from repro.core.request import Request
+from repro.core.scheduler import Scheduler
+
+
+@dataclasses.dataclass
+class SimResult:
+    policy: str
+    finished: List[Request]
+    sim_time: float
+    iterations: int
+    # GPU-memory waste accounting, byte-seconds by category
+    waste_preserved: float = 0.0
+    waste_recompute: float = 0.0
+    waste_swap_stall: float = 0.0
+    gpu_byte_seconds: float = 0.0        # total capacity * time (denominator)
+    forward_time: float = 0.0
+    recompute_time: float = 0.0
+    stall_time: float = 0.0
+    stats: Optional[object] = None
+
+    # ---- headline metrics -------------------------------------------------
+    def normalized_latency(self, pct: float = 50.0) -> float:
+        vals = [r.latency_metrics()["normalized"] for r in self.finished]
+        return float(np.percentile(vals, pct)) if vals else float("nan")
+
+    def throughput_rps(self) -> float:
+        return len(self.finished) / self.sim_time if self.sim_time else 0.0
+
+    def ttft(self, pct: float = 50.0) -> float:
+        vals = [r.latency_metrics()["ttft"] for r in self.finished
+                if r.latency_metrics()["ttft"] is not None]
+        return float(np.percentile(vals, pct)) if vals else float("nan")
+
+    def waste_fraction(self) -> float:
+        w = self.waste_preserved + self.waste_recompute + self.waste_swap_stall
+        return w / self.gpu_byte_seconds if self.gpu_byte_seconds else 0.0
+
+    def recompute_time_fraction(self) -> float:
+        return (self.recompute_time / self.forward_time
+                if self.forward_time else 0.0)
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "policy": self.policy,
+            "finished": len(self.finished),
+            "sim_time_s": round(self.sim_time, 2),
+            "throughput_rps": round(self.throughput_rps(), 4),
+            "norm_latency_p50_s_per_tok": round(self.normalized_latency(), 5),
+            "norm_latency_p90_s_per_tok": round(self.normalized_latency(90),
+                                                5),
+            "ttft_p50_s": round(self.ttft(), 4),
+            "waste_fraction": round(self.waste_fraction(), 4),
+            "recompute_time_fraction": round(self.recompute_time_fraction(),
+                                             4),
+        }
+
+
+def simulate(requests: Sequence[Request], policy: PolicyConfig,
+             cost: CostModel, *, estimator: Optional[DurationEstimator] = None,
+             profiles: Optional[dict] = None, max_time: float = 36000.0,
+             max_iters: int = 2_000_000) -> SimResult:
+    if estimator is None:
+        estimator = DurationEstimator(mode=policy.estimator,
+                                      profiles=profiles)
+    sched = Scheduler(policy, cost, estimator=estimator)
+    arrivals = deque(sorted(requests, key=lambda r: r.arrival))
+    resume_heap: list = []       # (resume_time, rid, request)
+    now = 0.0
+    iters = 0
+    res = SimResult(policy=policy.name, finished=[], sim_time=0.0,
+                    iterations=0)
+    m = cost.m_bytes
+
+    def admit(upto: float):
+        while arrivals and arrivals[0].arrival <= upto:
+            sched.submit(arrivals.popleft())
+
+    while (arrivals or sched.has_work()) and now < max_time \
+            and iters < max_iters:
+        admit(now)
+        while resume_heap and resume_heap[0][0] <= now:
+            t, _, req = heapq.heappop(resume_heap)
+            sched.notify_resumed(req, now)
+
+        plan = sched.next_iteration(now)
+        if plan.empty:
+            # idle: jump to the next event
+            nxt = []
+            if arrivals:
+                nxt.append(arrivals[0].arrival)
+            if resume_heap:
+                nxt.append(resume_heap[0][0])
+            if not nxt:
+                break
+            now = max(now, min(nxt))
+            continue
+
+        iters += 1
+        iter_time = cost.t_fwd(max(1, plan.query_tokens),
+                               plan.context_tokens) + plan.stall_s
+        end = now + iter_time
+
+        # ---- waste accounting over [now, end) -----------------------------
+        res.gpu_byte_seconds += iter_time * sched.gpu_capacity * m
+        res.waste_preserved += iter_time * sched.paused_device_tokens() * m
+        rec_tokens = sum(min(n, sched._recompute_debt.get(r.rid, 0))
+                         for r, n in plan.chunks)
+        if plan.query_tokens:
+            rec_share = rec_tokens / plan.query_tokens
+            res.recompute_time += iter_time * rec_share
+            # Eq.1-style: recompute's own occupancy + everyone else's memory
+            # held during the recompute-attributable part of the iteration.
+            res.waste_recompute += (iter_time * rec_share
+                                    * sched.gpu_used() * m)
+        res.forward_time += iter_time - plan.stall_s
+        res.stall_time += plan.stall_s
+        if plan.stall_s:
+            res.waste_swap_stall += plan.stall_s * sched.gpu_used() * m
+
+        events = sched.apply_plan(plan, end)
+        for req, intc in events["intercepted"]:
+            sched.notify_intercepted(req, intc, end)
+            heapq.heappush(resume_heap,
+                           (end + intc.duration, req.rid, req))
+        res.finished.extend(events["finished"])
+        now = end
+
+    res.sim_time = now
+    res.iterations = iters
+    res.stats = sched.stats
+    return res

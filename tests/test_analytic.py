@@ -1,0 +1,101 @@
+"""Validate the analytic roofline cost model against XLA cost_analysis on a
+configuration where cost_analysis is EXACT: all scans have trip count 1
+(single layer period, single attention chunk, direct CE), so XLA's
+count-bodies-once semantics introduces no undercount."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import InputShape, simple_dense
+from repro.launch.analytic import step_cost
+from repro.launch.roofline import collective_bytes_from_hlo
+
+
+def _exact_cfg():
+    # ONE layer period -> layer scan trip = 1; seq <= 1024 -> one attention
+    # chunk; vocab < 65536 -> direct (unchunked) CE.
+    return simple_dense("probe", "test", n_layers=1, d_model=256, n_heads=8,
+                        n_kv_heads=8, head_dim=32, d_ff=1024,
+                        vocab_size=1024, dtype="float32")
+
+
+def _flops(compiled):
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return float(ca["flops"])
+
+
+def test_prefill_flops_match():
+    cfg = _exact_cfg()
+    from repro.launch.steps import build_prefill_step
+    B, S = 2, 256
+    _, fn = build_prefill_step(cfg, S)
+    from repro.models import LM
+    params = jax.eval_shape(
+        lambda: LM(cfg).init(jax.random.PRNGKey(0), dtype="float32"))
+    toks = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    compiled = jax.jit(fn).lower(params, toks, None).compile()
+    got = _flops(compiled)
+    shape = InputShape("probe", S, B, "prefill")
+    want = step_cost(cfg, shape).flops_global
+    # analytic uses avg ctx S/2 for causal; allow generous band
+    assert want * 0.4 < got < want * 2.5, (got, want)
+
+
+def test_train_flops_match():
+    cfg = _exact_cfg()
+    from repro.launch.steps import build_train_step
+    from repro.training.optimizer import adamw_init
+    from repro.models import LM
+    B, S = 2, 256
+    _, fn = build_train_step(cfg, remat=False)
+    params = jax.eval_shape(
+        lambda: LM(cfg).init(jax.random.PRNGKey(0), dtype="float32"))
+    opt = jax.eval_shape(adamw_init, params)
+    toks = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    mask = jax.ShapeDtypeStruct((B, S), jnp.float32)
+    compiled = jax.jit(fn).lower(params, opt, toks, toks, mask,
+                                 None).compile()
+    got = _flops(compiled)
+    shape = InputShape("probe", S, B, "train")
+    want = step_cost(cfg, shape).flops_global
+    # analytic includes a remat factor (4x fwd); compiled here has
+    # remat=False (3x fwd) -> expect got ~ 0.75x want
+    assert want * 0.3 < got < want * 1.8, (got, want)
+
+
+def test_scan_undercount_demonstrated():
+    """The calibration fact this module exists for: N-layer scanned model
+    reports ~the same flops as the 1-layer one."""
+    from repro.launch.steps import build_prefill_step
+    from repro.models import LM
+    got = {}
+    for n_layers in (1, 4):
+        cfg = simple_dense("probe", "test", n_layers=n_layers, d_model=256,
+                           n_heads=8, n_kv_heads=8, head_dim=32, d_ff=1024,
+                           vocab_size=1024, dtype="float32")
+        _, fn = build_prefill_step(cfg, 256)
+        params = jax.eval_shape(
+            lambda cfg=cfg: LM(cfg).init(jax.random.PRNGKey(0),
+                                         dtype="float32"))
+        toks = jax.ShapeDtypeStruct((2, 256), jnp.int32)
+        got[n_layers] = _flops(jax.jit(fn).lower(params, toks,
+                                                 None).compile())
+    # 4 layers scanned != 4x flops of 1 layer (bodies counted once)
+    assert got[4] < 2.0 * got[1]
+
+
+def test_collective_parser_loop_multiplier():
+    hlo = """
+%wbody.1 (p: f32[8]) -> f32[8] {
+  %ar.5 = f32[8]{0} all-reduce(f32[8]{0} %p), to_apply=%sum
+}
+ENTRY %main (x: f32[8]) -> f32[8] {
+  %w = f32[8]{0} while(f32[8]{0} %x), condition=%c, body=%wbody.1
+  %ag = f32[16]{0} all-gather(f32[8]{0} %w)
+}
+"""
+    got = collective_bytes_from_hlo(hlo, loop_multiplier=10)
+    assert got["all-reduce"] == 8 * 4 * 10   # inside the while body
+    assert got["all-gather"] == 16 * 4       # top level: counted once

@@ -1,0 +1,59 @@
+"""Config registry and analytic size accounting."""
+import pytest
+
+from repro.configs import (ARCH_REGISTRY, INPUT_SHAPES, get_config,
+                           list_archs)
+
+EXPECTED_PARAMS_B = {
+    "deepseek-moe-16b": (14, 18),
+    "musicgen-large": (2, 4),
+    "gemma2-9b": (9, 11),
+    "deepseek-7b": (6, 8),
+    "pixtral-12b": (11, 13.5),
+    "deepseek-v3-671b": (640, 700),
+    "xlstm-350m": (0.25, 0.45),
+    "qwen2-72b": (70, 76),
+    "llama3.2-1b": (1.0, 1.5),
+    "zamba2-1.2b": (0.9, 1.6),
+}
+
+
+def test_registry_complete():
+    assert len(ARCH_REGISTRY) == 10
+    assert set(EXPECTED_PARAMS_B) == set(list_archs())
+    assert set(INPUT_SHAPES) == {"train_4k", "prefill_32k", "decode_32k",
+                                 "long_500k"}
+
+
+@pytest.mark.parametrize("arch", sorted(ARCH_REGISTRY))
+def test_param_counts(arch):
+    cfg = get_config(arch)
+    n = cfg.approx_n_params() / 1e9
+    lo, hi = EXPECTED_PARAMS_B[arch]
+    assert lo <= n <= hi, f"{arch}: {n:.2f}B outside [{lo}, {hi}]"
+    # active params never exceed totals for non-shared-block archs
+    if cfg.family != "hybrid":
+        assert cfg.active_params_per_token() <= cfg.approx_n_params() * 1.01
+
+
+@pytest.mark.parametrize("arch", sorted(ARCH_REGISTRY))
+def test_tiny_variants_are_small(arch):
+    t = get_config(arch, tiny=True)
+    assert t.n_layers <= 4
+    assert t.d_model <= 512
+    for blk in t.blocks:
+        if blk.ffn is not None and blk.ffn.kind == "moe":
+            assert blk.ffn.n_routed_experts <= 4
+
+
+def test_kv_token_bytes():
+    # llama3.2-1b: 16 layers * 2 * 8 kv heads * 64 dims * 2 bytes
+    cfg = get_config("llama3.2-1b")
+    assert cfg.kv_token_bytes() == 16 * 2 * 8 * 64 * 2
+    # MLA caches the compressed latent: (512 + 64) per layer
+    v3 = get_config("deepseek-v3-671b")
+    assert v3.kv_token_bytes() == 61 * (512 + 64) * 2
+    # SSM archs have no per-token KV, only fixed per-request state
+    x = get_config("xlstm-350m")
+    assert x.kv_token_bytes() == 0
+    assert x.state_bytes() > 0

@@ -1,0 +1,131 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU): shape and
+dtype sweeps per kernel."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.paged_attention import paged_attention
+from repro.kernels.swap_pack import swap_pack, swap_unpack
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("B,Hkv,G,Tq,Tk,hd", [
+    (1, 1, 1, 128, 128, 64),
+    (2, 2, 4, 128, 128, 64),
+    (1, 2, 2, 64, 128, 32),     # cross-length (prefix context)
+    (2, 1, 8, 128, 128, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes(B, Hkv, G, Tq, Tk, hd, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Hkv, G, Tq, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, Tk, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, Tk, hd)).astype(dtype)
+    out = flash_attention(q, k, v, bq=64, bk=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("window,softcap,causal", [
+    (None, None, True), (64, None, True), (None, 30.0, True),
+    (32, 50.0, True), (None, None, False),
+])
+def test_flash_attention_masking(window, softcap, causal):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 2, 2, 128, 64))
+    k = jax.random.normal(ks[1], (1, 2, 128, 64))
+    v = jax.random.normal(ks[2], (1, 2, 128, 64))
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, bq=64, bk=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("B,Hkv,G,hd,page,max_pages,n_pages", [
+    (2, 2, 4, 64, 16, 8, 32),
+    (4, 1, 8, 128, 8, 16, 64),
+    (1, 4, 1, 32, 32, 4, 16),
+    (3, 2, 2, 64, 16, 5, 20),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention(B, Hkv, G, hd, page, max_pages, n_pages, dtype):
+    rng = np.random.default_rng(B * 7 + page)
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Hkv, G, hd)).astype(dtype)
+    kp = jax.random.normal(ks[1], (n_pages, page, Hkv, hd)).astype(dtype)
+    vp = jax.random.normal(ks[2], (n_pages, page, Hkv, hd)).astype(dtype)
+    bt = jnp.asarray(rng.integers(0, n_pages, (B, max_pages)), jnp.int32)
+    lens = jnp.asarray(rng.integers(1, page * max_pages + 1, (B,)),
+                       jnp.int32)
+    out = paged_attention(q, kp, vp, bt, lens, interpret=True)
+    want = ref.paged_attention_ref(q, kp, vp, bt, lens)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+def test_paged_attention_matches_dense_decode():
+    """Paged decode == flash over the gathered dense cache (cross-oracle)."""
+    rng = np.random.default_rng(3)
+    B, Hkv, G, hd, page, max_pages, n_pages = 2, 2, 2, 32, 8, 6, 24
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Hkv, G, hd))
+    kp = jax.random.normal(ks[1], (n_pages, page, Hkv, hd))
+    vp = jax.random.normal(ks[2], (n_pages, page, Hkv, hd))
+    bt = jnp.asarray(rng.integers(0, n_pages, (B, max_pages)), jnp.int32)
+    lens = jnp.asarray([page * max_pages, 17], jnp.int32)
+    out = paged_attention(q, kp, vp, bt, lens, interpret=True)
+    k = kp[bt].reshape(B, max_pages * page, Hkv, hd)
+    v = vp[bt].reshape(B, max_pages * page, Hkv, hd)
+    s = jnp.einsum("bhgd,bshd->bhgs", q, k) / np.sqrt(hd)
+    valid = jnp.arange(max_pages * page)[None] < lens[:, None]
+    s = jnp.where(valid[:, None, None], s, -1e30)
+    want = jnp.einsum("bhgs,bshd->bhgd", jax.nn.softmax(s, -1), v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int8])
+@pytest.mark.parametrize("n_move", [1, 5, 16])
+def test_swap_pack_unpack_roundtrip(dtype, n_move):
+    rng = np.random.default_rng(n_move)
+    pool = jnp.asarray(rng.normal(size=(32, 8, 2, 16)) * 10).astype(dtype)
+    ids = jnp.asarray(rng.choice(32, n_move, replace=False), jnp.int32)
+    staged = swap_pack(pool, ids, interpret=True)
+    assert jnp.array_equal(staged, ref.swap_pack_ref(pool, ids))
+    # overwrite, then restore: exact roundtrip
+    zeroed = swap_unpack(pool, jnp.zeros_like(staged), ids, interpret=True)
+    assert jnp.array_equal(zeroed, ref.swap_unpack_ref(
+        pool, jnp.zeros_like(staged), ids))
+    restored = swap_unpack(zeroed, staged, ids, interpret=True)
+    assert jnp.array_equal(restored, pool)
+
+
+@pytest.mark.parametrize("B,H,T,dk,dv,c", [
+    (2, 2, 64, 16, 16, 16),
+    (1, 4, 128, 32, 64, 32),
+    (2, 1, 256, 64, 64, 128),
+    (1, 2, 96, 16, 16, 32),      # non-power-of-two chunk count
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gla_scan_kernel(B, H, T, dk, dv, c, dtype):
+    from repro.kernels.gla_scan import gla_scan
+    from repro.models.ssm import chunked_gla
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, H, T, dk)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, H, T, dk)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, H, T, dv)).astype(dtype)
+    la = (-jnp.abs(jax.random.normal(ks[3], (B, H, T))) * 0.2
+          ).astype(jnp.float32)
+    y, S = gla_scan(q, k, v, la, chunk=c, interpret=True)
+    y_ref, S_ref = chunked_gla(q, k, v, la, c)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), atol=tol)
+    np.testing.assert_allclose(np.asarray(S), np.asarray(S_ref), atol=tol)

@@ -1,0 +1,43 @@
+"""BlockManager unit tests."""
+import pytest
+
+from repro.memory import BlockManager
+
+
+def test_alloc_free_cycle():
+    bm = BlockManager(8, 16)
+    assert bm.num_free == 8 and bm.free_tokens == 128
+    a = bm.allocate(3)
+    assert len(a) == 3 and bm.num_free == 5
+    b = bm.allocate(5)
+    assert bm.num_free == 0
+    assert bm.allocate(1) is None      # no partial allocation
+    bm.free(a)
+    assert bm.num_free == 3
+    bm.free(b)
+    assert sorted(a + b) == sorted(set(a + b))  # all distinct pages
+
+
+def test_double_free_guard():
+    bm = BlockManager(4, 16)
+    a = bm.allocate(1)
+    bm.free(a)
+    with pytest.raises(AssertionError):
+        bm.free(a)
+
+
+def test_refcount_fork():
+    bm = BlockManager(4, 16)
+    a = bm.allocate(2)
+    bm.fork(a)
+    bm.free(a)
+    assert bm.num_free == 2  # still referenced once
+    bm.free(a)
+    assert bm.num_free == 4
+
+
+def test_pages_for_tokens():
+    bm = BlockManager(4, 16)
+    assert bm.pages_for_tokens(1) == 1
+    assert bm.pages_for_tokens(16) == 1
+    assert bm.pages_for_tokens(17) == 2

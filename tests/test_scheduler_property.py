@@ -1,0 +1,98 @@
+"""Property-based tests (hypothesis) over the scheduler + simulator:
+system invariants must hold for arbitrary workloads and capacities."""
+import copy
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.configs import get_config
+from repro.core import CostModel, POLICIES
+from repro.core.request import Interception, Request, Segment
+from repro.core.scheduler import Scheduler
+from repro.sim import simulate
+from repro.utils.hw import A100
+
+
+def _cost():
+    return CostModel(cfg=get_config("gpt-j-6b"), chip=A100, n_chips=1)
+
+
+@st.composite
+def workload(draw):
+    n = draw(st.integers(2, 8))
+    reqs = []
+    t = 0.0
+    for rid in range(n):
+        t += draw(st.floats(0.0, 2.0))
+        prompt = draw(st.integers(16, 800))
+        n_seg = draw(st.integers(1, 4))
+        segs = []
+        for j in range(n_seg - 1):
+            segs.append(Segment(
+                draw(st.integers(1, 40)),
+                Interception(draw(st.sampled_from(["math", "qa", "chatbot"])),
+                             draw(st.floats(1e-4, 30.0)),
+                             draw(st.integers(1, 50)))))
+        segs.append(Segment(draw(st.integers(1, 40)), None))
+        reqs.append(Request(rid=rid, arrival=t, prompt_len=prompt,
+                            segments=segs))
+    return reqs
+
+
+POLICY_NAMES = ["vllm", "improved_discard", "preserve", "swap", "infercept"]
+
+
+@settings(max_examples=20, deadline=None)
+@given(reqs=workload(), policy=st.sampled_from(POLICY_NAMES),
+       cap_frac=st.floats(0.05, 1.0))
+def test_all_requests_finish_and_memory_bounded(reqs, policy, cap_frac):
+    cost = _cost()
+    cap = max(2000, int(cost.kv_capacity_tokens() * cap_frac))
+    # instrument: wrap scheduler to check invariants each iteration
+    sched_holder = {}
+    orig_next = Scheduler.next_iteration
+
+    def checked_next(self, now):
+        plan = orig_next(self, now)
+        sched_holder["s"] = self
+        # memory bound (decode writes accounted in plan application)
+        assert self.gpu_used() <= self.gpu_capacity
+        # token conservation per live request
+        for r in self.live.values():
+            assert r.device_tokens >= 0 and r.host_tokens >= 0
+            assert r.device_tokens + r.host_tokens <= r.target_ctx
+        # budgeted swap: in+out <= N_i
+        if self.policy.swap_budgeted:
+            t_iter = self.cost.t_fwd(max(1, plan.query_tokens),
+                                     plan.context_tokens)
+            budget = self.cost.swap_tokens_within(t_iter)
+            moved = sum(n for _, n in plan.swap_out) + \
+                sum(n for _, n in plan.swap_in)
+            assert moved <= budget + 1
+        return plan
+
+    Scheduler.next_iteration = checked_next
+    try:
+        res = simulate(copy.deepcopy(reqs), POLICIES[policy], cost,
+                       max_time=36000.0)
+    finally:
+        Scheduler.next_iteration = orig_next
+
+    assert len(res.finished) == len(reqs), \
+        f"{policy}: {len(res.finished)}/{len(reqs)} finished"
+    for r in res.finished:
+        m = r.latency_metrics()
+        assert m["e2e"] >= 0
+        assert r.output_tokens == r.total_output
+
+
+@settings(max_examples=10, deadline=None)
+@given(reqs=workload())
+def test_output_token_counts_policy_invariant(reqs):
+    """Every policy must deliver exactly the scripted number of tokens."""
+    cost = _cost()
+    outs = {}
+    for policy in ["vllm", "infercept"]:
+        res = simulate(copy.deepcopy(reqs), POLICIES[policy], cost)
+        outs[policy] = sorted((r.rid, r.output_tokens) for r in res.finished)
+    assert outs["vllm"] == outs["infercept"]

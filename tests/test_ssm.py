@@ -1,0 +1,92 @@
+"""SSM core invariants: the chunkwise-parallel GLA form must equal the
+step-recurrent form, and chunked continuation must equal monolithic."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SSMCfg
+from repro.models import ssm
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 64])
+def test_gla_chunked_equals_steps(chunk):
+    ks = jax.random.split(KEY, 4)
+    B, H, T, dk, dv = 2, 2, 24, 16, 16
+    q = jax.random.normal(ks[0], (B, H, T, dk))
+    k = jax.random.normal(ks[1], (B, H, T, dk))
+    v = jax.random.normal(ks[2], (B, H, T, dv))
+    la = -jnp.abs(jax.random.normal(ks[3], (B, H, T))) * 0.2
+    y_par, S_par = ssm.chunked_gla(q, k, v, la, chunk)
+    S = jnp.zeros((B, H, dk, dv))
+    ys = []
+    for t in range(T):
+        y, S = ssm.gla_step(S, q[:, :, t], k[:, :, t], v[:, :, t],
+                            la[:, :, t])
+        ys.append(y)
+    y_step = jnp.stack(ys, axis=2)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_step),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(S_par), np.asarray(S), atol=1e-4)
+
+
+def test_maxplus_scan_matches_loop():
+    ks = jax.random.split(KEY, 2)
+    lf = -jnp.abs(jax.random.normal(ks[0], (3, 17)))
+    it = jax.random.normal(ks[1], (3, 17))
+    m0 = jnp.full((3,), -1e30)
+    got = ssm._maxplus_scan(lf, it, m0)
+    m = m0
+    want = []
+    for t in range(17):
+        m = jnp.maximum(m + lf[:, t], it[:, t])
+        want.append(m)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(jnp.stack(want, -1)), atol=1e-6)
+
+
+CASES = [
+    ("mamba2", ssm.init_mamba2, ssm.mamba2_forward, ssm.mamba2_decode,
+     ssm.mamba2_state_shapes, dict(d_state=16, n_heads=2, expand=2,
+                                   chunk_size=8)),
+    ("mlstm", ssm.init_mlstm, ssm.mlstm_forward, ssm.mlstm_decode,
+     ssm.mlstm_state_shapes, dict(n_heads=2, expand=2, chunk_size=8)),
+    ("slstm", ssm.init_slstm, ssm.slstm_forward, ssm.slstm_decode,
+     ssm.slstm_state_shapes, dict(n_heads=2, expand=1, ff_mult=4 / 3)),
+]
+
+
+@pytest.mark.parametrize("name,init,fwd,dec,shapes,kw", CASES,
+                         ids=[c[0] for c in CASES])
+def test_cell_chunked_continuation(name, init, fwd, dec, shapes, kw):
+    s = SSMCfg(kind=name, **kw)
+    d, B, T = 64, 2, 24
+    p = init(KEY, d, s, jnp.float32)
+    x = jax.random.normal(KEY, (B, T, d)) * 0.5
+    y_ref, st_ref = fwd(p, s, d, x)
+    st = shapes(s, d, B, jnp.float32)
+    ys = []
+    for c0 in range(0, T, 8):
+        y, st = fwd(p, s, d, x[:, c0:c0 + 8], initial_state=st)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(ys, 1)),
+                               np.asarray(y_ref), atol=1e-4)
+
+
+@pytest.mark.parametrize("name,init,fwd,dec,shapes,kw", CASES,
+                         ids=[c[0] for c in CASES])
+def test_cell_decode_equals_forward(name, init, fwd, dec, shapes, kw):
+    s = SSMCfg(kind=name, **kw)
+    d, B, T = 64, 2, 12
+    p = init(KEY, d, s, jnp.float32)
+    x = jax.random.normal(KEY, (B, T, d)) * 0.5
+    y_ref, _ = fwd(p, s, d, x)
+    st = shapes(s, d, B, jnp.float32)
+    ys = []
+    for t in range(T):
+        y, st = dec(p, s, d, x[:, t], st)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.stack(ys, 1)),
+                               np.asarray(y_ref), atol=2e-4)

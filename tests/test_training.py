@@ -1,0 +1,46 @@
+"""Training substrate: loss decreases, checkpoints roundtrip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.training.checkpoint import (latest_checkpoint, load_checkpoint,
+                                       save_checkpoint)
+from repro.training.data import DataConfig, SyntheticLM
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import train_loop
+
+
+def test_loss_decreases(tmp_path):
+    cfg = get_config("llama3.2-1b", tiny=True)
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                  global_batch=16, seed=0))
+    state, history = train_loop(
+        cfg, steps=60, data_iter=data.batches(),
+        opt_cfg=AdamWConfig(lr=5e-3, warmup_steps=5, total_steps=60),
+        dtype=jnp.float32, log_every=10)
+    first, last = history[0]["loss"], history[-1]["loss"]
+    assert last < first - 0.5, f"loss did not decrease: {first} -> {last}"
+
+
+def test_data_pipeline_determinism():
+    cfg = DataConfig(vocab_size=128, seq_len=16, global_batch=4, seed=3)
+    a = next(SyntheticLM(cfg).batches(start_step=7))
+    b = next(SyntheticLM(cfg).batches(start_step=7))
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    # labels are tokens shifted by one
+    toks, labels, _ = a
+    np.testing.assert_array_equal(toks[:, 1:], labels[:, :-1])
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = get_config("llama3.2-1b", tiny=True)
+    from repro.models import LM
+    m = LM(cfg)
+    params = m.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+    path = save_checkpoint(str(tmp_path), 42, params, shard_bytes=1 << 20)
+    assert latest_checkpoint(str(tmp_path)) == path
+    restored = load_checkpoint(path, jax.eval_shape(lambda: params))
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

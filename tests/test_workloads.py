@@ -1,0 +1,34 @@
+"""Workload generator: Table-1 statistics reproduced within tolerance."""
+import numpy as np
+
+from repro.serving.workloads import (AUGMENT_SPECS, MIXED, make_workload,
+                                     workload_table)
+
+
+def test_table1_calibration():
+    reqs = make_workload(seed=0, n_requests=1200, rate_rps=2.0)
+    stats = workload_table(reqs)
+    for kind in MIXED:
+        spec = AUGMENT_SPECS[kind]
+        s = stats[kind]
+        if spec.int_time[0] > 1e-3:
+            assert abs(s["int_time_mean"] - spec.int_time[0]) \
+                < 0.25 * spec.int_time[0] + 1e-3, kind
+        assert abs(s["n_int_mean"] - spec.n_int[0]) \
+            < 0.3 * spec.n_int[0] + 0.5, kind
+
+
+def test_poisson_arrivals():
+    reqs = make_workload(seed=1, n_requests=2000, rate_rps=4.0)
+    gaps = np.diff([r.arrival for r in reqs])
+    assert abs(np.mean(gaps) - 0.25) < 0.03
+
+
+def test_scripts_are_bounded():
+    reqs = make_workload(seed=2, n_requests=300, rate_rps=2.0, max_ctx=4096)
+    for r in reqs:
+        total = r.prompt_len + sum(s.gen_tokens for s in r.segments) + sum(
+            s.interception.returned_tokens for s in r.segments
+            if s.interception)
+        assert total <= 4096 * 1.05
+        assert r.segments[-1].interception is None
