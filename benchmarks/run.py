@@ -16,6 +16,8 @@ Paper targets (InferCept, ICML 2024):
   §5.1     — single-augment workloads (QA, Chatbot) + multi-GPU scaling
   kernels  — Pallas flash/paged/swap-pack vs refs (interpret-mode checked,
              XLA-path timed)
+  cache    — beyond-paper prefix-KV-cache sweep on the agent workload
+             (hit rate / tokens saved vs prefix-share; JSON emitted)
 """
 from __future__ import annotations
 
@@ -250,6 +252,60 @@ def bench_kernels(quick=False):
     _row("kernel_swap_pack", us_ref, {"exact_match": ok, "pages_moved": 16})
 
 
+def bench_prefix_cache_sweep(quick=False):
+    """Intercept-aware prefix cache (DESIGN.md §8): hit rate, recompute
+    tokens saved, and throughput vs the no-cache baseline, swept over the
+    agent workload's prefix-share ratio. Also writes
+    benchmarks/prefix_cache_sweep.json next to this file."""
+    import json
+    import os
+    from repro.core import POLICIES
+    from repro.serving.workloads import make_agent_workload
+    from repro.sim import simulate
+    cost = _cost()
+    n = 25 if quick else 60
+    shares = [0.3, 0.6] if quick else [0.2, 0.4, 0.6, 0.8]
+    results = []
+    for share in shares:
+        reqs = make_agent_workload(seed=11, n_sessions=n, rate_rps=2.0,
+                                   prefix_share=share)
+        for name in ["vllm", "infercept"]:
+            pol = POLICIES[name]
+            t0 = time.time()
+            base = simulate(copy.deepcopy(reqs), pol, cost)
+            cached = simulate(copy.deepcopy(reqs), pol, cost,
+                              prefix_cache=True)
+            wall = time.time() - t0
+            rec_base = base.stats.recompute_tokens + base.stats.fresh_tokens
+            rec_cached = (cached.stats.recompute_tokens
+                          + cached.stats.fresh_tokens)
+            row = {
+                "prefix_share": share,
+                "policy": name,
+                "cache_hit_tokens": cached.stats.cache_hit_tokens,
+                "cache_hit_rate": round(cached.cache_hit_rate(), 4),
+                "prefill_tokens_nocache": rec_base,
+                "prefill_tokens_cache": rec_cached,
+                "recompute_tokens_nocache": base.stats.recompute_tokens,
+                "recompute_tokens_cache": cached.stats.recompute_tokens,
+                "tokens_saved_frac": round(
+                    1.0 - rec_cached / max(1, rec_base), 4),
+                "tput_rps_nocache": round(base.throughput_rps(), 4),
+                "tput_rps_cache": round(cached.throughput_rps(), 4),
+                "norm_lat_p50_nocache": round(base.normalized_latency(), 5),
+                "norm_lat_p50_cache": round(cached.normalized_latency(), 5),
+            }
+            results.append(row)
+            _row(f"prefix_cache_{name}_share{share}",
+                 wall / max(1, base.iterations + cached.iterations) * 1e6,
+                 {k: v for k, v in row.items()
+                  if k not in ("prefix_share", "policy")})
+    out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "prefix_cache_sweep.json")
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2)
+
+
 def bench_multi_gpu_scaling(quick=False):
     """13B on 1 vs 2 GPUs, 70B on 4 (paper §5.1: distributed setting gains
     grow because more HBM per GPU is left for KV)."""
@@ -276,7 +332,7 @@ def bench_multi_gpu_scaling(quick=False):
 
 ALL = [bench_table1_workload, bench_fig2_end2end, bench_fig3_breakdown,
        bench_waste_s32, bench_estimator, bench_single_augment,
-       bench_kernels, bench_multi_gpu_scaling]
+       bench_kernels, bench_multi_gpu_scaling, bench_prefix_cache_sweep]
 
 
 def main() -> None:

@@ -4,6 +4,11 @@ recomputation, and the min-waste scheduler — and compare every policy on
 the SAME workload, verifying identical outputs.
 
     PYTHONPATH=src python examples/serve_augmented.py [--requests 8]
+        [--agent] [--prefix-cache]
+
+--agent swaps in the shared-prefix agent workload (multi-turn sessions over
+common system prompts); --prefix-cache enables the intercept-aware prefix
+KV cache (DESIGN.md §8) — token streams must stay identical either way.
 """
 import argparse
 import copy
@@ -12,7 +17,7 @@ import time
 from repro.configs import get_config
 from repro.core import POLICIES
 from repro.serving.engine import Engine
-from repro.serving.workloads import make_workload
+from repro.serving.workloads import make_agent_workload, make_workload
 
 
 def scaled_workload(n, max_ctx=220):
@@ -32,24 +37,38 @@ def scaled_workload(n, max_ctx=220):
     return reqs
 
 
+def agent_workload(cfg, n_sessions):
+    return make_agent_workload(
+        seed=11, n_sessions=n_sessions, rate_rps=2.0, vocab=cfg.vocab_size,
+        n_templates=2, system_prompt_len=50, turns=(2, 2), turn_gap_s=3.0,
+        hist_per_turn=12, prefix_share=0.75, gen_tokens=(8, 3),
+        final_gen=(8, 3), ret_tokens=(6, 2), max_tool_calls=2, max_ctx=240)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--agent", action="store_true",
+                    help="shared-prefix multi-turn agent workload")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="enable the prefix KV cache (DESIGN.md §8)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, tiny=True)
-    reqs = scaled_workload(args.requests)
+    reqs = (agent_workload(cfg, max(1, args.requests // 2)) if args.agent
+            else scaled_workload(args.requests))
     n_int = sum(1 for r in reqs for s in r.segments if s.interception)
     print(f"workload: {len(reqs)} requests, {n_int} interceptions\n")
 
     streams = {}
     print(f"{'policy':18s} {'virt_time':>9s} {'norm_lat':>9s} {'ttft':>7s} "
-          f"{'recompute':>9s} {'swapped':>8s} {'wall':>6s}")
+          f"{'recompute':>9s} {'cache_hit':>9s} {'swapped':>8s} "
+          f"{'wall':>6s}")
     for name in ["vllm", "improved_discard", "preserve", "swap",
                  "infercept"]:
         eng = Engine(cfg, POLICIES[name], page_size=16, n_pages=128,
-                     max_model_len=256)
+                     max_model_len=256, prefix_cache=args.prefix_cache)
         for r in copy.deepcopy(reqs):
             eng.add_request(r)
         t0 = time.time()
@@ -61,12 +80,17 @@ def main():
         streams[name] = {r.rid: eng.generated_text(r) for r in fin}
         print(f"{name:18s} {eng.now:8.2f}s "
               f"{lats[len(lats)//2]*1e3:7.2f}ms {ttfts[len(ttfts)//2]:6.3f}s "
-              f"{st.recompute_tokens:9d} {st.swapped_out_tokens:8d} "
-              f"{wall:5.1f}s")
+              f"{st.recompute_tokens:9d} {st.cache_hit_tokens:9d} "
+              f"{st.swapped_out_tokens:8d} {wall:5.1f}s")
 
     base = streams["preserve"]
     ok = all(s == base for s in streams.values())
     print(f"\ntoken streams identical across all policies: {ok}")
+    # stable digest: compare across runs (e.g. --prefix-cache on vs off)
+    import hashlib
+    digest = hashlib.sha256(
+        repr(sorted(base.items())).encode()).hexdigest()[:12]
+    print(f"stream digest: {digest}")
     assert ok
 
 

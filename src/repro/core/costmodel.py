@@ -75,6 +75,17 @@ class CostModel:
         return (max(flops / self.flops_rate, mem / self.hbm_rate)
                 + self.fixed_overhead_s)
 
+    def recompute_terms(self, c_tokens: int, cached_tokens: int = 0):
+        """Chunked-recompute cost inputs for Eq. 4/5 when a prefix of the
+        discarded context is already held by the prefix cache: recompute
+        covers only the uncached suffix. Returns
+        (recompute_tokens, t_fwd_c, n_chunks, t_fwd_chunk); with
+        cached_tokens=0 these are exactly the paper's full-context terms."""
+        c_r = max(0, c_tokens - max(0, cached_tokens))
+        sat = max(1, self.saturation_tokens)
+        n_chunks = max(1, -(-c_r // sat))
+        return c_r, self.t_fwd(c_r), n_chunks, self.t_fwd(min(c_r, sat))
+
     def t_swap(self, tokens: int) -> float:
         return tokens * self.m_bytes / self.swap_rate_bytes
 

@@ -40,6 +40,10 @@ class Request:
     arrival: float
     prompt_len: int
     segments: List[Segment]
+    # Explicit prompt token ids (shared-prefix / agent workloads). None =
+    # synthesize unique-per-rid ids (engine) or an anonymous stream (sim),
+    # which makes cross-request prefix sharing impossible by construction.
+    prompt_tokens: Optional[List[int]] = None
 
     # --- dynamic token accounting -----------------------------------------
     seg_idx: int = 0
@@ -65,6 +69,9 @@ class Request:
     def __post_init__(self):
         self.target_ctx = self.prompt_len
         self.arrival_key = self.arrival
+        if self.prompt_tokens is not None:
+            assert len(self.prompt_tokens) == self.prompt_len, \
+                "prompt_tokens length must equal prompt_len"
 
     # ------------------------------------------------------------------
     @property

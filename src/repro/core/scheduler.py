@@ -54,6 +54,9 @@ class SchedulerStats:
     preserves: int = 0
     swaps: int = 0
     evictions: int = 0
+    # tokens restored from the prefix cache instead of being recomputed
+    # (credited via notify_cache_hit; they reduce recompute debt)
+    cache_hit_tokens: int = 0
 
 
 class Scheduler:
@@ -79,9 +82,19 @@ class Scheduler:
         self.live: Dict[int, Request] = {}
         self.stats = SchedulerStats()
         self._recompute_debt: Dict[int, int] = {}
+        # rid -> device tokens that are PURE cache credit (no real compute
+        # invested since the last match); only these may be reclaimed when
+        # admission is head-of-line blocked
+        self._cache_credit: Dict[int, int] = {}
         # Engine hook: called as on_discard(req, n_device_tokens_dropped)
         # right before a request's device-resident context is released.
         self.on_discard = None
+        # Prefix-cache hook: cache_probe(req) -> tokens of the request's
+        # current context that would survive a discard (cached prefix).
+        # Feeds the cache-aware Eq. 5: recompute waste counts only the
+        # uncached suffix, shifting decisions toward discard when the
+        # prefix is shared. None = no cache.
+        self.cache_probe = None
 
     # ------------------------------------------------------------------
     # memory accounting
@@ -150,6 +163,7 @@ class Scheduler:
             self._recompute_debt[req.rid] = (
                 self._recompute_debt.get(req.rid, 0) + req.device_tokens)
             req.device_tokens = 0
+        self._cache_credit.pop(req.rid, None)
         if req in self.swap_out_order:
             self.swap_out_order.remove(req)
         req.pending_swap_out = 0
@@ -166,6 +180,21 @@ class Scheduler:
         if req not in self.swap_out_order:
             self.swap_out_order.append(req)
         self.stats.swaps += 1
+
+    def notify_cache_hit(self, req: Request, n_tokens: int):
+        """The engine/simulator restored ``n_tokens`` of context from the
+        prefix cache (shared pages forked, no compute). The tokens count as
+        device-resident immediately — the request is typically WAITING, so
+        admission sees the reduced to_compute — and pay down recompute debt:
+        they were discarded but never recomputed."""
+        if n_tokens <= 0:
+            return
+        req.device_tokens += n_tokens
+        self._cache_credit[req.rid] = req.device_tokens
+        debt = self._recompute_debt.get(req.rid, 0)
+        if debt:
+            self._recompute_debt[req.rid] = max(0, debt - n_tokens)
+        self.stats.cache_hit_tokens += n_tokens
 
     def notify_resumed(self, req: Request, now: float):
         """Interception finished: returned tokens arrive, request resumes."""
@@ -229,6 +258,8 @@ class Scheduler:
                 if chunk_budget <= 0:
                     break
                 n = min(n, chunk_budget)
+            if n > free and self.cache_probe is not None:
+                free += self._reclaim_waiting_credit(req, n - free, now)
             if n > free:
                 if pol.chunked_recompute and free > 0:
                     n = free
@@ -238,6 +269,12 @@ class Scheduler:
             free -= n
             if pol.chunked_recompute:
                 chunk_budget -= n
+
+        # 3b (prefix cache only) helper defined below: when the FCFS head
+        #    can't fit, cache-credited context held by LATER waiting
+        #    requests is released first — their pages stay indexed in the
+        #    cache, so the release is nearly free, and matched-but-
+        #    unadmitted requests can never deadlock admission.
 
         # 4. swap budget N_i: what the link can hide behind this iteration's
         #    forwarding (§4.1). Unbudgeted Swap moves everything and stalls.
@@ -256,6 +293,40 @@ class Scheduler:
             self._plan_swap_in(plan, budget, free)
 
         return plan
+
+    def _reclaim_waiting_credit(self, head: Request, needed: int,
+                                now: float) -> int:
+        """Release device context held by waiting requests BEHIND the FCFS
+        head (latest arrival first) until ``needed`` tokens are freed. Only
+        runs with the prefix cache on: on_discard registers the released
+        pages in the cache first, so the victims typically re-match their
+        context the moment memory allows — this trades a cheap tree lookup
+        for admission progress and bounds cache credits by what admission
+        can actually use."""
+        reclaimed = 0
+        try:
+            idx = self.waiting.index(head)
+        except ValueError:
+            return 0
+        for victim in reversed(self.waiting[idx + 1:]):
+            if reclaimed >= needed:
+                break
+            # only PURE cache credit is reclaimable: context with real
+            # chunk-prefill invested is never thrown away for the head —
+            # that would make the cache a regression under pressure
+            if (victim.device_tokens <= 0 or victim.host_tokens
+                    or victim.device_tokens
+                    != self._cache_credit.get(victim.rid, -1)):
+                continue
+            reclaimed += victim.device_tokens
+            if self.on_discard is not None:
+                self.on_discard(victim, victim.device_tokens)
+            self._recompute_debt[victim.rid] = (
+                self._recompute_debt.get(victim.rid, 0)
+                + victim.device_tokens)
+            victim.device_tokens = 0
+            self._cache_credit.pop(victim.rid, None)
+        return reclaimed
 
     def _plan_swap_out(self, plan: IterationPlan, budget: Optional[int]):
         used = sum(n for _, n in plan.swap_out)
@@ -305,17 +376,20 @@ class Scheduler:
         if not candidates:
             return budget
         c_other = self.gpu_used()
-        sat = max(1, self.cost.saturation_tokens)
         scored = []
         for r in candidates:
             t_int = self.estimator.estimate(r, now)
             c = r.device_tokens
-            n_chunks = max(1, -(-c // sat))
+            cached = 0
+            if self.cache_probe is not None:
+                cached = max(0, min(int(self.cache_probe(r)), c))
+            c_r, t_fwd_c, n_chunks, t_fwd_chunk = \
+                self.cost.recompute_terms(c, cached)
             decision, w = min_waste_decision(
                 t_int_est=t_int, c_tokens=c, m_bytes=self.cost.m_bytes,
-                t_fwd_c=self.cost.t_fwd(c), n_chunks=n_chunks,
-                t_fwd_chunk=self.cost.t_fwd(min(c, sat)),
-                c_other_tokens=max(0, c_other - c))
+                t_fwd_c=t_fwd_c, n_chunks=n_chunks,
+                t_fwd_chunk=t_fwd_chunk,
+                c_other_tokens=max(0, c_other - c), recompute_tokens=c_r)
             scored.append((w, decision, r))
         scored.sort(key=lambda t: (-t[0], t[2].rid))
 
@@ -369,6 +443,7 @@ class Scheduler:
 
         for req, n in plan.chunks:
             req.device_tokens += n
+            self._cache_credit.pop(req.rid, None)  # real compute invested
             debt = self._recompute_debt.get(req.rid, 0)
             rec = min(n, debt)
             if rec:
@@ -392,6 +467,7 @@ class Scheduler:
                     self.running.remove(req)
                     del self.live[req.rid]
                     self._recompute_debt.pop(req.rid, None)
+                    self._cache_credit.pop(req.rid, None)
                     events["finished"].append(req)
         return events
 

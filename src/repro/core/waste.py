@@ -41,12 +41,24 @@ def waste_chunked_discard(t_fwd_c: float, c_tokens: int, m_bytes: float,
 
 def min_waste_decision(*, t_int_est: float, c_tokens: int, m_bytes: float,
                        t_fwd_c: float, n_chunks: int, t_fwd_chunk: float,
-                       c_other_tokens: int):
+                       c_other_tokens: int, recompute_tokens: int = None):
     """Eq. 5: min(WastePreserve, WasteChunkDiscard) for one intercepted
     request. Returns (decision, waste) with decision in
     {"preserve", "discard"}; swap is allocated separately by budget order.
+
+    ``recompute_tokens`` is the cache-aware refinement: with the prefix
+    cache (repro.cache) a discard only has to recompute the UNCACHED
+    suffix — the shared-prefix pages are restored by a tree lookup — so
+    the discard side of Eq. 5 is evaluated at the suffix length while the
+    preserve side still holds the full context. The callers' t_fwd_c /
+    n_chunks / t_fwd_chunk must already be sized for the suffix
+    (CostModel.recompute_terms). Defaults to c_tokens (no cache).
     """
+    c_r = c_tokens if recompute_tokens is None else recompute_tokens
     wp = waste_preserve(t_int_est, c_tokens, m_bytes)
-    wd = waste_chunked_discard(t_fwd_c, c_tokens, m_bytes, n_chunks,
+    if c_r <= 0:
+        # fully cached context: discarding is free, holding memory is not
+        return ("discard", 0.0)
+    wd = waste_chunked_discard(t_fwd_c, c_r, m_bytes, n_chunks,
                                t_fwd_chunk, c_other_tokens)
     return ("preserve", wp) if wp <= wd else ("discard", wd)

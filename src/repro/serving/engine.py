@@ -11,6 +11,13 @@ model with paged KV storage:
   * swap_out/in   — page-granular HBM<->host movement (numpy backing),
                     the budgeted pipelined swap of §4.1
   * discard/evict — pages freed via the scheduler's on_discard hook
+  * prefix cache  — optional (prefix_cache=True): a token-block radix tree
+                    (repro.cache) indexes computed pages; admitted/resumed
+                    requests fork matching prefix pages instead of
+                    recomputing them, discarded/finished contexts are
+                    registered, shared pages are copy-on-write, and LRU
+                    eviction reclaims cache-only pages under page pressure
+                    (DESIGN.md §8)
 
 Time is virtual (the same cost model as the simulator) so interception
 durations and swap budgets are exact and runs are reproducible; tensor math
@@ -35,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cache import PrefixCache
 from repro.configs.base import ModelConfig
 from repro.core.costmodel import CostModel
 from repro.core.estimator import DurationEstimator
@@ -59,6 +67,8 @@ class Engine:
                  page_size: int = 16, n_pages: int = 256,
                  max_model_len: int = 512, seed: int = 0,
                  estimator: Optional[DurationEstimator] = None,
+                 prefix_cache: bool = False,
+                 cache_pages: Optional[int] = None,
                  dtype=jnp.float32):
         for blk in cfg.blocks:
             assert blk.kind in ("attn", "shared_attn"), \
@@ -77,6 +87,14 @@ class Engine:
         self.sched = Scheduler(policy, self.cost, estimator=estimator,
                                gpu_capacity_tokens=cap)
         self.sched.on_discard = self._on_discard
+        self.cache: Optional[PrefixCache] = None
+        self._match_seen: Dict[int, int] = {}   # rid -> gen of a known miss
+        if prefix_cache:
+            self.cache = PrefixCache(
+                page_size, max_pages=cache_pages,
+                adopt=self.blocks.fork, release=self.blocks.free,
+                can_evict=lambda pid: self.blocks.ref_count(pid) == 1)
+            self.sched.cache_probe = self._cache_probe
         self.api = APIExecutor(cfg.vocab_size)
         self.kv: Dict[int, ReqKV] = {}
         self.now = 0.0
@@ -108,21 +126,60 @@ class Engine:
         while self._pending_arrivals and \
                 self._pending_arrivals[0].arrival <= self.now:
             req = self._pending_arrivals.popleft()
-            toks = prompt_token_ids(req.rid, req.prompt_len,
-                                    self.cfg.vocab_size)
-            self.kv[req.rid] = ReqKV(tokens=list(map(int, toks)), pages=[])
+            if req.prompt_tokens is not None:
+                toks = [int(t) % self.cfg.vocab_size
+                        for t in req.prompt_tokens]
+            else:
+                toks = list(map(int, prompt_token_ids(
+                    req.rid, req.prompt_len, self.cfg.vocab_size)))
+            self.kv[req.rid] = ReqKV(tokens=toks, pages=[])
             self.sched.submit(req)
 
     # ------------------------------------------------------------------
     # page plumbing
     # ------------------------------------------------------------------
+    def _allocate_pages(self, n: int) -> Optional[List[int]]:
+        """Allocate n pages, evicting cold cache-only pages on pressure."""
+        got = self.blocks.allocate(n)
+        if got is None and self.cache is not None:
+            self.cache.evict(n - self.blocks.num_free)
+            got = self.blocks.allocate(n)
+        return got
+
     def _ensure_pages(self, st: ReqKV, upto_tokens: int):
         need = -(-upto_tokens // self.page)
         while len(st.pages) < need:
-            got = self.blocks.allocate(1)
+            got = self._allocate_pages(1)
             if got is None:
                 raise RuntimeError("out of KV pages — size the engine up")
             st.pages.append(("dev", got[0]))
+
+    def _ensure_writable(self, st: ReqKV, pos: int):
+        """Copy-on-write: the page holding token position ``pos`` is about
+        to be written. Shared pages (prefix-cache hits, or pages the cache
+        adopted from this request) are immutable — take a private copy of
+        the payload first. Exclusive pages are written in place."""
+        if self.cache is None:
+            return
+        pidx = pos // self.page
+        if pidx >= len(st.pages):
+            return
+        kind, pid = st.pages[pidx]
+        if kind != "dev" or not self.blocks.is_shared(pid):
+            return
+        new, copied = self.blocks.cow_target(pid)
+        if new is None:                # page pressure: evict cache, retry
+            self.cache.evict(1)
+            new, copied = self.blocks.cow_target(pid)
+        if new is None:
+            raise RuntimeError("out of KV pages during copy-on-write")
+        if copied:
+            src = jnp.asarray(pid, jnp.int32)
+            dst = jnp.asarray(new, jnp.int32)
+            self.pools = jax.tree.map(
+                lambda leaf: leaf.at[:, dst].set(jnp.take(leaf, src, axis=1)),
+                self.pools)
+        st.pages[pidx] = ("dev", new)
 
     def _device_page_ids(self, st: ReqKV, n_pages: int) -> List[int]:
         ids = []
@@ -173,12 +230,73 @@ class Engine:
         self.pools = jax.tree.map(s, self.pools, cache)
 
     # ------------------------------------------------------------------
+    # prefix cache
+    # ------------------------------------------------------------------
+    def _cache_probe(self, req: Request) -> int:
+        """Scheduler hook: tokens of this request's context that a discard
+        would get back from the cache (the full pages _on_discard is about
+        to register). An estimate — eviction may drop them before resume —
+        but LRU keeps recently discarded contexts hot (DESIGN.md §8)."""
+        st = self.kv.get(req.rid)
+        if st is None or req.host_tokens:
+            return 0
+        return (st.computed // self.page) * self.page
+
+    def _register_in_cache(self, st: ReqKV):
+        """Index this context's computed full pages in the radix tree. The
+        cache adopts (refcount-bumps) pages it hasn't seen; duplicates of
+        already-indexed blocks stay solely owned by the request."""
+        if self.cache is None:
+            return
+        full = st.computed // self.page
+        head = st.pages[:full]
+        if full <= 0 or any(e is None or e[0] != "dev" for e in head):
+            return                     # host-resident prefix: not shareable
+        self.cache.insert(st.tokens[:full * self.page],
+                          [e[1] for e in head])
+
+    def _try_cache_match(self, req: Request):
+        """Fork the longest cached prefix of a fresh/discarded context in
+        place of recomputing it. Capped at target_ctx - 1 so at least one
+        token remains to compute (its logits seed the next decode), and at
+        the scheduler's free token capacity — credited tokens count against
+        it immediately, so a burst of fully-matched requests must not
+        overcommit the GPU. The matched pages are shared read-only; a
+        partial tail page is taken COW so the request can append into it.
+        A zero-hit probe is decided by the first token block, so misses are
+        memoized on the cache generation alone — waiting queues don't
+        re-walk the tree every iteration until the index actually changes
+        (discard invalidates via _match_seen.pop)."""
+        st = self.kv.get(req.rid)
+        if (self.cache is None or st is None or st.pages
+                or req.device_tokens or req.host_tokens):
+            return
+        if self._match_seen.get(req.rid) == self.cache.generation:
+            return                     # known miss on an unchanged index
+        limit = min(req.target_ctx - 1, self.sched.gpu_free())
+        if limit <= 0:
+            return
+        m = self.cache.match(st.tokens[:limit])
+        if m.total <= 0:
+            self._match_seen[req.rid] = self.cache.generation
+            return
+        self.blocks.fork(m.pages)
+        st.pages = [("dev", pid) for pid in m.pages]
+        if m.tail_pid is not None:
+            self.blocks.fork([m.tail_pid])
+            st.pages.append(("dev", m.tail_pid))
+        st.computed = m.total
+        self.sched.notify_cache_hit(req, m.total)
+
+    # ------------------------------------------------------------------
     # plan execution
     # ------------------------------------------------------------------
     def _on_discard(self, req: Request, n_tokens: int):
         st = self.kv.get(req.rid)
         if st is None:
             return
+        self._register_in_cache(st)    # context survives under cache refs
+        self._match_seen.pop(req.rid, None)   # context gone: probe afresh
         freed = [e[1] for e in st.pages if e is not None and e[0] == "dev"]
         self.blocks.free(freed)
         # host prefix survives; discarded device pages are dropped entirely
@@ -254,7 +372,7 @@ class Engine:
         for p in self._swap_in_pages.get(req.rid, []):
             kind, payload = st.pages[p]
             assert kind == "host"
-            got = self.blocks.allocate(1)
+            got = self._allocate_pages(1)
             if got is None:
                 raise RuntimeError("out of KV pages during swap-in")
             pid = got[0]
@@ -272,6 +390,9 @@ class Engine:
         n_pad = max(n, min(self._bucket(n),
                            self.max_pages * self.page - start))
         self._ensure_pages(st, start + n)
+        # only the first page of the chunk range can be shared (a matched
+        # COW tail); pages past it were freshly allocated above
+        self._ensure_writable(st, start)
         bt = np.full((1, self.max_pages), self.scratch_page, np.int64)
         ids = self._device_page_ids(st, len(st.pages))
         bt[0, :len(ids)] = ids
@@ -294,6 +415,10 @@ class Engine:
         if st.computed == req.target_ctx and len(st.tokens) == req.target_ctx:
             st.tokens.append(int(jnp.argmax(
                 np.asarray(logits[0]).reshape(-1, self.cfg.vocab_size)[-1])))
+        if st.computed == req.target_ctx:
+            # prefill/recompute complete: publish the context so concurrent
+            # same-prefix requests can hit before this one even finishes
+            self._register_in_cache(st)
 
     def _exec_decode(self, reqs: List[Request]):
         if not reqs:
@@ -301,6 +426,7 @@ class Engine:
         sts = [self.kv[r.rid] for r in reqs]
         for r, st in zip(reqs, sts):
             self._ensure_pages(st, r.target_ctx + 1)
+            self._ensure_writable(st, r.target_ctx)
         B = len(reqs)
         B_pad = self._bucket(B)   # bucketed batch -> stable jit shapes
         bt = np.full((B_pad, self.max_pages), self.scratch_page, np.int64)
@@ -331,8 +457,15 @@ class Engine:
         """One scheduler iteration; returns False when fully drained."""
         self._admit()
         for req, toks in self.api.completions(self.now):
-            self.kv[req.rid].tokens.extend(map(int, toks))
+            self.kv[req.rid].tokens.extend(
+                int(t) % self.cfg.vocab_size for t in toks)
             self.sched.notify_resumed(req, self.now)
+        if self.cache is not None:
+            # single match point: covers fresh admissions, discarded
+            # contexts re-entering after an interception, and eviction
+            # victims — anything waiting with no context yet
+            for req in list(self.sched.waiting):
+                self._try_cache_match(req)
 
         plan = self.sched.next_iteration(self.now)
         if plan.empty:
@@ -375,9 +508,11 @@ class Engine:
         for req in events["finished"]:
             self.finished.append(req)
             st = self.kv[req.rid]
-            self.blocks.free([e[1] for e in st.pages
+            self._register_in_cache(st)   # prompt+gen prefix reusable by
+            self.blocks.free([e[1] for e in st.pages   # follow-up turns
                               if e is not None and e[0] == "dev"])
             st.pages = []
+            self._match_seen.pop(req.rid, None)
         self.now = end
         return True
 

@@ -113,6 +113,90 @@ def make_workload(seed: int, n_requests: int, rate_rps: float,
     return out
 
 
+def make_agent_workload(seed: int, n_sessions: int, rate_rps: float, *,
+                        vocab: int = 32000, n_templates: int = 4,
+                        system_prompt_len: int = 160,
+                        turns: tuple = (1, 4), turn_gap_s: float = 30.0,
+                        hist_per_turn: int = 96, prefix_share: float = 0.7,
+                        kinds: Sequence[str] = ("math", "qa", "ve"),
+                        gen_tokens: tuple = (24, 10),
+                        final_gen: tuple = (32, 12),
+                        ret_tokens: Optional[tuple] = None,
+                        max_tool_calls: int = 4,
+                        max_ctx: int = 4096) -> List[Request]:
+    """Agent traffic with real shared-prefix structure (explicit token ids).
+
+    Sessions arrive Poisson at ``rate_rps``; each samples one of
+    ``n_templates`` system prompts and runs 1..n multi-turn requests. Turn
+    k's shared part is always an exact prefix-extension of turn k-1's
+    prompt (template + accumulated history, clamped to the ``max_ctx//2``
+    budget while holding the share ratio), so a prefix cache sees: (a)
+    cross-session sharing of the system prompt, (b) cross-turn sharing of
+    the previous prompt's prefix — registered as soon as turn k-1
+    prefills — and (c) each request's own context again after a discard.
+
+    ``prefix_share`` sets the shared fraction of each prompt: the unique
+    tail is sized so unique/(shared+unique) = 1 - prefix_share. Tool-call
+    interceptions are sampled from AUGMENT_SPECS (``ret_tokens`` overrides
+    the returned-length distribution, handy for tiny-context tests).
+    """
+    assert 0.0 < prefix_share <= 1.0
+    rng = np.random.default_rng(seed)
+    templates = [rng.integers(0, vocab, size=system_prompt_len).tolist()
+                 for _ in range(n_templates)]
+    reqs: List[Request] = []
+    t = 0.0
+    cap = max_ctx // 2
+    for _ in range(n_sessions):
+        t += rng.exponential(1.0 / rate_rps)
+        tmpl = templates[int(rng.integers(n_templates))]
+        # session context: a prefix-extension chain seeded by the template
+        # and re-rooted at each emitted prompt, so turn k+1's shared part
+        # is by construction a prefix-extension of turn k's prompt
+        ctx: List[int] = list(tmpl)
+        arr = t
+        for _turn in range(int(rng.integers(turns[0], turns[1] + 1))):
+            n_unique = max(4, int(round(
+                len(ctx) * (1.0 - prefix_share) / prefix_share)))
+            if len(ctx) + n_unique > cap:
+                # context outgrew the budget: hold the share ratio INSIDE
+                # the cap — take a prefix of the session context and size
+                # the unique tail to fill the remainder, so prompts stay
+                # bounded and prefix_share keeps meaning what it says
+                take = min(len(ctx), max(1, int(round(prefix_share * cap))))
+                n_unique = max(4, cap - take)
+            else:
+                take = len(ctx)
+            unique = rng.integers(0, vocab, size=n_unique).tolist()
+            prompt = ctx[:take] + unique
+            segments: List[Segment] = []
+            for _ in range(_clipped_normal(rng, 1.5, 1.0, lo=0,
+                                           hi=max_tool_calls)):
+                kind = kinds[int(rng.integers(len(kinds)))]
+                spec = AUGMENT_SPECS[kind]
+                ret = ret_tokens if ret_tokens is not None \
+                    else spec.ret_tokens
+                segments.append(Segment(
+                    gen_tokens=_clipped_normal(rng, *gen_tokens, lo=4),
+                    interception=Interception(
+                        kind, _lognormal(rng, *spec.int_time),
+                        _clipped_normal(rng, *ret, lo=1))))
+            segments.append(Segment(
+                gen_tokens=_clipped_normal(rng, *final_gen, lo=4),
+                interception=None))
+            reqs.append(Request(rid=0, arrival=arr, prompt_len=len(prompt),
+                                segments=segments, prompt_tokens=prompt))
+            # re-root on the emitted prompt + fresh history filler (the
+            # assistant/tool turns a real agent framework would append)
+            ctx = prompt + rng.integers(0, vocab,
+                                        size=hist_per_turn).tolist()
+            arr += rng.exponential(turn_gap_s)
+    reqs.sort(key=lambda r: (r.arrival, id(r)))
+    for i, r in enumerate(reqs):
+        r.rid = i
+    return reqs
+
+
 def profile_means(kinds: Sequence[str] = MIXED) -> Dict[str, float]:
     """Offline per-type duration means (the 'profile' estimator mode)."""
     return {k: AUGMENT_SPECS[k].int_time[0] for k in kinds}

@@ -5,16 +5,26 @@ analytic cost model — the same T_fwd/T_swap mappings the scheduler itself
 uses (in the paper both come from offline profiling). This is how we
 reproduce the paper's end-to-end experiments (Fig. 2, Fig. 3, the waste
 fractions, and the estimator-vs-oracle comparison) on a CPU-only box.
+
+With ``prefix_cache=True`` the simulator mirrors the engine's prefix-KV
+cache hit/miss accounting (DESIGN.md §8): the same radix tree indexes
+token streams — explicit ``prompt_tokens`` where the workload provides
+them, synthetic unique-per-request ids elsewhere — so cross-request
+prompt sharing and a discarded request's self-rehit resolve exactly as
+they do in the real engine, with counter page ids standing in for
+physical pages.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
+import itertools
 from collections import deque
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.cache import PrefixCache
 from repro.core.costmodel import CostModel
 from repro.core.estimator import DurationEstimator
 from repro.core.policy import PolicyConfig
@@ -37,6 +47,7 @@ class SimResult:
     recompute_time: float = 0.0
     stall_time: float = 0.0
     stats: Optional[object] = None
+    cache_stats: Optional[object] = None   # CacheStats when prefix_cache
 
     # ---- headline metrics -------------------------------------------------
     def normalized_latency(self, pct: float = 50.0) -> float:
@@ -59,6 +70,15 @@ class SimResult:
         return (self.recompute_time / self.forward_time
                 if self.forward_time else 0.0)
 
+    def cache_hit_rate(self) -> float:
+        """Prefix-cache hit tokens over all context-establishing tokens
+        (hits + chunk-prefilled fresh + recomputed)."""
+        if self.stats is None:
+            return 0.0
+        hit = getattr(self.stats, "cache_hit_tokens", 0)
+        denom = hit + self.stats.fresh_tokens + self.stats.recompute_tokens
+        return hit / denom if denom else 0.0
+
     def summary(self) -> Dict[str, float]:
         return {
             "policy": self.policy,
@@ -78,7 +98,9 @@ class SimResult:
 def simulate(requests: Sequence[Request], policy: PolicyConfig,
              cost: CostModel, *, estimator: Optional[DurationEstimator] = None,
              profiles: Optional[dict] = None, max_time: float = 36000.0,
-             max_iters: int = 2_000_000) -> SimResult:
+             max_iters: int = 2_000_000, prefix_cache: bool = False,
+             cache_page_size: int = 16,
+             cache_max_pages: Optional[int] = None) -> SimResult:
     if estimator is None:
         estimator = DurationEstimator(mode=policy.estimator,
                                       profiles=profiles)
@@ -91,6 +113,72 @@ def simulate(requests: Sequence[Request], policy: PolicyConfig,
                     iterations=0)
     m = cost.m_bytes
 
+    # ---- prefix-cache mirror (same accounting as Engine) ------------------
+    cache = None
+    if prefix_cache:
+        page = cache_page_size
+        cache = PrefixCache(page, max_pages=(
+            cache_max_pages if cache_max_pages is not None
+            else max(1, sched.gpu_capacity // page)))
+        res.cache_stats = cache.stats
+        pid_source = itertools.count()
+        streams: Dict[int, List[int]] = {}
+        # Gen/returned token ids are unknown to the simulator, so each
+        # request extends its stream with ids unique to (rid, position):
+        # self-rehit after a discard matches exactly (same ids), while
+        # cross-request sharing happens only through real prompt_tokens —
+        # the same two reuse channels the engine sees.
+        GEN_BASE = 1 << 42
+
+        def stream(req: Request, n: int) -> List[int]:
+            s = streams.get(req.rid)
+            if s is None:
+                s = (list(req.prompt_tokens) if req.prompt_tokens is not None
+                     else [-(req.rid * 1_000_003 + i + 1)
+                           for i in range(req.prompt_len)])
+                streams[req.rid] = s
+            while len(s) < n:
+                s.append(GEN_BASE + req.rid * 1_000_000 + len(s))
+            return s[:n]
+
+        def cache_probe(req: Request) -> int:
+            if req.host_tokens:
+                return 0
+            return (req.device_tokens // page) * page
+
+        sched.cache_probe = cache_probe
+
+        match_seen: Dict[int, int] = {}      # rid -> gen of a known miss
+
+        def register(req: Request, computed: int):
+            full = (computed // page) * page
+            if full > 0 and not req.host_tokens:
+                cache.insert(stream(req, full),
+                             [next(pid_source) for _ in range(full // page)])
+
+        def on_discard(req: Request, n_tokens: int):
+            register(req, req.device_tokens)
+            match_seen.pop(req.rid, None)
+
+        sched.on_discard = on_discard
+
+        def try_match(req: Request):
+            # mirror Engine._try_cache_match: cap at target-1 AND at free
+            # capacity (credits count against it); misses are memoized on
+            # the cache generation (zero-hit is first-block-determined)
+            if req.device_tokens or req.host_tokens:
+                return
+            if match_seen.get(req.rid) == cache.generation:
+                return
+            limit = min(req.target_ctx - 1, sched.gpu_free())
+            if limit <= 0:
+                return
+            hit = cache.match(stream(req, limit)).total
+            if hit > 0:
+                sched.notify_cache_hit(req, hit)
+            else:
+                match_seen[req.rid] = cache.generation
+
     def admit(upto: float):
         while arrivals and arrivals[0].arrival <= upto:
             sched.submit(arrivals.popleft())
@@ -101,6 +189,9 @@ def simulate(requests: Sequence[Request], policy: PolicyConfig,
         while resume_heap and resume_heap[0][0] <= now:
             t, _, req = heapq.heappop(resume_heap)
             sched.notify_resumed(req, now)
+        if cache is not None:
+            for req in list(sched.waiting):
+                try_match(req)
 
         plan = sched.next_iteration(now)
         if plan.empty:
@@ -138,6 +229,14 @@ def simulate(requests: Sequence[Request], policy: PolicyConfig,
             res.waste_swap_stall += plan.stall_s * sched.gpu_used() * m
 
         events = sched.apply_plan(plan, end)
+        if cache is not None:
+            # mirror the engine's registration points: prefill/recompute
+            # completion and request finish publish the computed context
+            for req, _ in plan.chunks:
+                if req.context_ready:
+                    register(req, req.device_tokens)
+            for req in events["finished"]:
+                register(req, req.target_ctx)
         for req, intc in events["intercepted"]:
             sched.notify_intercepted(req, intc, end)
             heapq.heappush(resume_heap,

@@ -1,0 +1,300 @@
+"""Prefix-KV-cache subsystem tests (DESIGN.md §8).
+
+Three layers: radix-tree unit tests, refcount/COW property tests over the
+BlockManager ownership protocol, and the engine-level extension of the
+policy-equivalence property — greedy token streams must be bit-identical
+with the cache on and off, while recompute tokens drop sharply.
+"""
+import copy
+import random
+
+import pytest
+
+from repro.cache import PrefixCache
+from repro.configs import get_config
+from repro.core import POLICIES, CostModel
+from repro.memory import BlockManager
+from repro.serving.engine import Engine
+from repro.serving.workloads import make_agent_workload
+from repro.sim import simulate
+from repro.utils.hw import A100
+
+PAGE = 4
+
+
+# ---------------------------------------------------------------------------
+# radix tree units
+# ---------------------------------------------------------------------------
+def test_match_insert_roundtrip():
+    c = PrefixCache(PAGE)
+    toks = list(range(10))                      # 2 full pages + partial
+    assert c.insert(toks, [7, 8]) == 2
+    m = c.match(toks)
+    assert m.tokens == 8 and m.pages == [7, 8]
+    assert m.tail_pid is None                   # tokens 8,9 never indexed
+    # a different prompt sharing one page
+    m2 = c.match([0, 1, 2, 3, 99, 99, 99, 99])
+    assert m2.tokens == 4 and m2.pages == [7]
+
+
+def test_match_partial_tail():
+    c = PrefixCache(PAGE)
+    c.insert(list(range(8)), [1, 2])
+    # shares page 0 fully, then 2 of page 1's 4 tokens
+    m = c.match([0, 1, 2, 3, 4, 5, 99])
+    assert m.tokens == 4 and m.pages == [1]
+    assert m.tail_pid == 2 and m.tail_tokens == 2
+    assert m.total == 6
+
+
+def test_insert_dedup_keeps_existing_page():
+    c = PrefixCache(PAGE)
+    assert c.insert([0, 1, 2, 3], [5]) == 1
+    assert c.insert([0, 1, 2, 3, 4, 5, 6, 7], [9, 6]) == 1  # first deduped
+    assert c.match([0, 1, 2, 3]).pages == [5]
+    assert c.n_pages == 2
+    assert c.stats.deduped_pages == 1
+
+
+def test_lru_eviction_order_and_cascade():
+    released = []
+    c = PrefixCache(PAGE, release=lambda pids: released.extend(pids))
+    c.insert([0, 1, 2, 3, 4, 5, 6, 7], [1, 2])   # chain A: 1 -> 2
+    c.insert([9, 9, 9, 9], [3])                  # leaf B
+    c.match([0, 1, 2, 3, 4, 5, 6, 7])            # touch chain A
+    assert c.evict(1) == 1
+    assert released == [3]                       # B was coldest
+    assert c.evict(2) == 2                       # A peeled leaf-first
+    assert released == [3, 2, 1]
+    assert c.n_pages == 0
+
+
+def test_eviction_skips_in_use_pages():
+    c = PrefixCache(PAGE, can_evict=lambda pid: pid != 2)
+    c.insert([0, 1, 2, 3], [2])
+    c.insert([9, 9, 9, 9], [4])
+    assert c.evict(5) == 1                       # only page 4 evictable
+    assert c.n_pages == 1
+    assert c.match([0, 1, 2, 3]).pages == [2]    # pinned page still indexed
+
+
+def test_capacity_auto_evict():
+    c = PrefixCache(PAGE, max_pages=2)
+    c.insert([0, 1, 2, 3], [1])
+    c.insert([8, 8, 8, 8], [2])
+    c.insert([9, 9, 9, 9], [3])
+    assert c.n_pages == 2
+    assert c.match([0, 1, 2, 3]).tokens == 0     # oldest evicted
+
+
+# ---------------------------------------------------------------------------
+# refcount / COW property (no double free, no free while referenced)
+# ---------------------------------------------------------------------------
+def test_cow_target_semantics():
+    bm = BlockManager(4, PAGE)
+    (p,) = bm.allocate(1)
+    assert bm.cow_target(p) == (p, False)        # exclusive: write in place
+    bm.fork([p])
+    new, copied = bm.cow_target(p)
+    assert copied and new != p
+    assert bm.ref_count(p) == 1 and bm.ref_count(new) == 1
+    bm.free([p]), bm.free([new])
+    assert bm.num_free == 4
+
+
+def test_cow_target_exhaustion_returns_none():
+    bm = BlockManager(1, PAGE)
+    (p,) = bm.allocate(1)
+    bm.fork([p])
+    assert bm.cow_target(p) == (None, False)     # needs a copy, none free
+    assert bm.ref_count(p) == 2                  # state untouched on failure
+
+
+def test_refcount_cow_property_random_ops():
+    """Random alloc/fork/free/cow interleavings: the free list and refcounts
+    must stay consistent, freed pages must really be unreferenced, and a
+    page must never be handed out twice concurrently."""
+    rng = random.Random(0xC0FFEE)
+    bm = BlockManager(16, PAGE)
+    refs = {}                                    # pid -> model refcount
+    for _ in range(3000):
+        op = rng.random()
+        if op < 0.35:
+            got = bm.allocate(rng.randint(1, 3))
+            if got is not None:
+                for p in got:
+                    assert p not in refs, "page handed out while referenced"
+                    refs[p] = 1
+        elif op < 0.60 and refs:
+            p = rng.choice(list(refs))
+            bm.fork([p])
+            refs[p] += 1
+        elif op < 0.90 and refs:
+            p = rng.choice(list(refs))
+            bm.free([p])
+            refs[p] -= 1
+            if refs[p] == 0:
+                del refs[p]
+        elif refs:
+            p = rng.choice(list(refs))
+            new, copied = bm.cow_target(p)
+            if new is None:
+                assert refs[p] > 1               # only shared pages can fail
+            elif copied:
+                assert refs[p] > 1
+                refs[p] -= 1
+                assert new not in refs
+                refs[new] = 1
+            else:
+                assert refs[p] == 1 and new == p
+        # invariants after every op
+        for p, n in refs.items():
+            assert bm.ref_count(p) == n
+        assert bm.num_free == bm.n_pages - len(refs)
+    for p in list(refs):
+        for _ in range(refs.pop(p)):
+            bm.free([p])
+    assert bm.num_free == bm.n_pages
+    with pytest.raises(AssertionError):
+        bm.free([0])                             # double free still guarded
+
+
+# ---------------------------------------------------------------------------
+# engine level: policy equivalence extended across cache on/off
+# ---------------------------------------------------------------------------
+def _agent_workload(cfg, n_sessions=3):
+    # system_prompt_len deliberately NOT page-aligned (50 vs page 16) so
+    # cross-session divergence lands mid-page and exercises COW tail reuse
+    return make_agent_workload(
+        seed=3, n_sessions=n_sessions, rate_rps=2.0, vocab=cfg.vocab_size,
+        n_templates=2, system_prompt_len=50, turns=(2, 2), turn_gap_s=3.0,
+        hist_per_turn=12, prefix_share=0.75, gen_tokens=(8, 3),
+        final_gen=(8, 3), ret_tokens=(6, 2), max_tool_calls=2, max_ctx=240)
+
+
+@pytest.fixture(scope="module")
+def cache_streams():
+    cfg = get_config("llama3.2-1b", tiny=True)
+    reqs = _agent_workload(cfg)
+    out = {}
+    for name in ["vllm", "infercept"]:
+        for cache_on in (False, True):
+            eng = Engine(cfg, POLICIES[name], page_size=16, n_pages=128,
+                         max_model_len=256, seed=0, prefix_cache=cache_on)
+            for r in copy.deepcopy(reqs):
+                eng.add_request(r)
+            fin = eng.run()
+            assert len(fin) == len(reqs), (name, cache_on)
+            out[(name, cache_on)] = (
+                {r.rid: eng.generated_text(r) for r in fin}, eng)
+    return out
+
+
+def test_streams_identical_across_cache_and_policies(cache_streams):
+    base, _ = cache_streams[("vllm", False)]
+    for key, (streams, _) in cache_streams.items():
+        assert streams == base, f"{key} diverged from (vllm, cache off)"
+
+
+def test_cache_cuts_recompute_tokens_at_least_30pct(cache_streams):
+    base = cache_streams[("vllm", False)][1].sched.stats
+    cached = cache_streams[("vllm", True)][1].sched.stats
+    assert base.recompute_tokens > 0
+    assert cached.cache_hit_tokens > 0
+    assert cached.recompute_tokens <= 0.7 * base.recompute_tokens, (
+        f"recompute {base.recompute_tokens} -> {cached.recompute_tokens}")
+
+
+def test_cache_mechanisms_exercised(cache_streams):
+    eng = cache_streams[("vllm", True)][1]
+    s = eng.cache.stats
+    assert s.inserted_pages > 0 and s.hit_tokens > 0
+    assert s.deduped_pages > 0          # recomputed contexts re-registered
+    assert s.tail_hit_tokens > 0        # partial-page COW reuse happened
+    # cross-request sharing: more hit tokens than any single context holds
+    assert eng.sched.stats.cache_hit_tokens > 256
+
+
+def test_no_page_leaks_with_cache(cache_streams):
+    for (name, cache_on), (_, eng) in cache_streams.items():
+        held = eng.cache.n_pages if eng.cache is not None else 0
+        assert eng.blocks.num_free == eng.blocks.n_pages - 1 - held, \
+            (name, cache_on)
+        if eng.cache is not None:       # every cached page: exactly one ref
+            assert eng.cache.clear() == held
+            assert eng.blocks.num_free == eng.blocks.n_pages - 1
+
+
+def test_cache_burst_does_not_overcommit_capacity():
+    """Regression: a burst of requests sharing one prompt must not let
+    cache credits push gpu_used past capacity and wedge admission — the
+    match cap + waiting-credit reclaim keep the engine draining."""
+    from repro.core.request import Request, Segment
+    cfg = get_config("llama3.2-1b", tiny=True)
+    prompt = list(range(24))
+    reqs = [Request(rid=i, arrival=0.0, prompt_len=24,
+                    segments=[Segment(gen_tokens=4, interception=None)],
+                    prompt_tokens=list(prompt)) for i in range(8)]
+    eng = Engine(cfg, POLICIES["vllm"], page_size=4, n_pages=24,
+                 max_model_len=64, seed=0, prefix_cache=True)
+    for r in reqs:
+        eng.add_request(r)
+    fin = eng.run()
+    assert len(fin) == 8, f"only {len(fin)}/8 finished (admission wedged)"
+    assert eng.sched.gpu_used() == 0
+    assert eng.sched.stats.cache_hit_tokens > 0      # sharing still worked
+
+
+def test_agent_workload_keeps_unique_tail_under_ctx_cap():
+    """Regression: when session history outgrows max_ctx//2, the SHARED
+    part is clamped, never the unique tail — consecutive turns must not
+    collapse into byte-identical prompts."""
+    reqs = make_agent_workload(seed=0, n_sessions=1, rate_rps=1.0,
+                               n_templates=1, system_prompt_len=160,
+                               turns=(4, 4), hist_per_turn=96, max_ctx=700,
+                               prefix_share=0.7)
+    prompts = [tuple(r.prompt_tokens) for r in reqs]
+    assert len(set(prompts)) == len(prompts), "duplicate prompts emitted"
+    assert max(len(p) for p in prompts) <= 350
+    # every turn still extends the previous turn's prompt (cache-shareable)
+    for a, b in zip(prompts, prompts[1:]):
+        shared = sum(1 for x, y in zip(a, b) if x == y)
+        assert b[:shared] == a[:shared] and shared > 100
+    # low prefix_share must not compound the unique tail geometrically:
+    # prompts stay within the max_ctx//2 budget at every share setting
+    for ps in (0.2, 0.5, 0.8):
+        rs = make_agent_workload(seed=11, n_sessions=6, rate_rps=2.0,
+                                 turns=(4, 4), prefix_share=ps)
+        assert max(r.prompt_len for r in rs) <= 4096 // 2, ps
+
+
+# ---------------------------------------------------------------------------
+# simulator mirrors the engine's accounting
+# ---------------------------------------------------------------------------
+def test_sim_cache_accounting():
+    cost = CostModel(cfg=get_config("gpt-j-6b"), chip=A100, n_chips=1)
+    reqs = make_agent_workload(seed=11, n_sessions=25, rate_rps=2.0,
+                               prefix_share=0.7)
+    base = simulate(copy.deepcopy(reqs), POLICIES["vllm"], cost)
+    cached = simulate(copy.deepcopy(reqs), POLICIES["vllm"], cost,
+                      prefix_cache=True)
+    assert len(cached.finished) == len(reqs) == len(base.finished)
+    # same outputs delivered
+    assert (sorted((r.rid, r.output_tokens) for r in base.finished)
+            == sorted((r.rid, r.output_tokens) for r in cached.finished))
+    assert base.stats.recompute_tokens > 0
+    assert cached.stats.recompute_tokens <= 0.7 * base.stats.recompute_tokens
+    assert cached.stats.cache_hit_tokens > 0
+    assert 0.0 < cached.cache_hit_rate() < 1.0
+    assert cached.cache_stats.inserted_pages > 0
+    # prompt sharing also cuts FRESH prefill, not just recompute
+    assert cached.stats.fresh_tokens < base.stats.fresh_tokens
+
+
+def test_sim_cache_respects_page_budget():
+    cost = CostModel(cfg=get_config("gpt-j-6b"), chip=A100, n_chips=1)
+    reqs = make_agent_workload(seed=5, n_sessions=12, rate_rps=2.0)
+    res = simulate(copy.deepcopy(reqs), POLICIES["vllm"], cost,
+                   prefix_cache=True, cache_max_pages=8)
+    assert res.cache_stats.evicted_pages > 0
+    assert len(res.finished) == len(reqs)

@@ -2,8 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-import hypothesis.strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings  # noqa: E402
+import hypothesis.strategies as st      # noqa: E402
 
 from repro.models.common import (apply_rope, chunked_cross_entropy,
                                  cross_entropy_logits, rms_norm, softcap)

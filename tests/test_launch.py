@@ -65,6 +65,7 @@ from repro.configs import get_config
 from repro.launch.sharding import param_shardings, cache_shardings
 from repro.launch.steps import build_serve_step
 from repro.launch.input_specs import params_struct
+from repro.launch.mesh import set_mesh
 from repro.models import LM
 mesh = jax.make_mesh((2, 4), ("data", "model"))
 cfg = get_config("llama3.2-1b", tiny=True)
@@ -76,7 +77,7 @@ cshard = cache_shardings(mesh, cfg, cache_s)
 toks = jax.ShapeDtypeStruct((8,), jax.numpy.int32)
 pos = jax.ShapeDtypeStruct((8,), jax.numpy.int32)
 tshard = NamedSharding(mesh, P("data"))
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     compiled = jax.jit(fn, in_shardings=(pshard, cshard, tshard, tshard),
                        out_shardings=(None, None, cshard)).lower(
         params_s, cache_s, toks, pos).compile()

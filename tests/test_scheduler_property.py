@@ -2,8 +2,11 @@
 system invariants must hold for arbitrary workloads and capacities."""
 import copy
 
-import hypothesis.strategies as st
-from hypothesis import given, settings
+import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st      # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
 from repro.configs import get_config
 from repro.core import CostModel, POLICIES
