@@ -306,6 +306,74 @@ def bench_prefix_cache_sweep(quick=False):
         json.dump(results, f, indent=2)
 
 
+def bench_decode_sweep(quick=False):
+    """In-place paged execution vs the gather/scatter oracle (DESIGN.md §9):
+    KV bytes moved per generated token and decode throughput on the real
+    engine, swept over context length; greedy token streams are asserted
+    bit-identical between the two paths. Writes
+    benchmarks/decode_sweep.json next to this file."""
+    import json
+    import os
+    from repro.configs import get_config
+    from repro.core import POLICIES
+    from repro.core.request import Request, Segment
+    from repro.serving.engine import Engine
+
+    cfg = get_config("llama3.2-1b", tiny=True)
+    ctxs = [128, 512] if quick else [128, 256, 512]
+    gen = 8 if quick else 12
+    page, n_reqs = 16, 2
+    results = []
+    for ctx in ctxs:
+        max_len = ctx + 2 * gen + page
+        n_pages = n_reqs * (max_len // page + 1) + 16
+        streams = {}
+        rows = {}
+        for mode in ("paged", "gather"):
+            eng = Engine(cfg, POLICIES["vllm"], page_size=page,
+                         n_pages=n_pages, max_model_len=max_len,
+                         paged=(mode == "paged"))
+            for i in range(n_reqs):
+                eng.add_request(Request(
+                    rid=i, arrival=0.0, prompt_len=ctx,
+                    segments=[Segment(gen_tokens=gen, interception=None)]))
+            t0 = time.time()
+            fin = eng.run()
+            wall = time.time() - t0
+            assert len(fin) == n_reqs, f"{mode} ctx={ctx} incomplete"
+            streams[mode] = {r.rid: eng.generated_text(r) for r in fin}
+            rows[mode] = {
+                "ctx": ctx,
+                "mode": mode,
+                "decode_tokens": eng.counters["decode_tokens"],
+                "kv_token_bytes": eng.kv_token_bytes,
+                "bytes_per_decode_token":
+                    round(eng.kv_bytes_per_decode_token(), 1),
+                "bytes_per_prefill_token":
+                    round(eng.kv_bytes_per_prefill_token(), 1),
+                "decode_tokens_per_s":
+                    round(eng.counters["decode_tokens"] / max(1e-9, wall),
+                          2),
+                "wall_s": round(wall, 3),
+            }
+        identical = streams["paged"] == streams["gather"]
+        ratio = (rows["gather"]["bytes_per_decode_token"]
+                 / max(1.0, rows["paged"]["bytes_per_decode_token"]))
+        for mode in ("paged", "gather"):
+            rows[mode]["streams_identical"] = identical
+            rows[mode]["gather_over_paged_bytes_ratio"] = round(ratio, 1)
+            results.append(rows[mode])
+            _row(f"decode_sweep_ctx{ctx}_{mode}",
+                 rows[mode]["wall_s"] * 1e6,
+                 {k: v for k, v in rows[mode].items()
+                  if k not in ("ctx", "mode", "wall_s")})
+        assert identical, f"paged/gather streams diverged at ctx={ctx}"
+    out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "decode_sweep.json")
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2)
+
+
 def bench_multi_gpu_scaling(quick=False):
     """13B on 1 vs 2 GPUs, 70B on 4 (paper §5.1: distributed setting gains
     grow because more HBM per GPU is left for KV)."""
@@ -332,14 +400,20 @@ def bench_multi_gpu_scaling(quick=False):
 
 ALL = [bench_table1_workload, bench_fig2_end2end, bench_fig3_breakdown,
        bench_waste_s32, bench_estimator, bench_single_augment,
-       bench_kernels, bench_multi_gpu_scaling, bench_prefix_cache_sweep]
+       bench_kernels, bench_multi_gpu_scaling, bench_prefix_cache_sweep,
+       bench_decode_sweep]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--decode-sweep", action="store_true",
+                    help="run only the paged-vs-gather decode sweep "
+                         "(alias for --only decode_sweep)")
     args = ap.parse_args()
+    if args.decode_sweep:
+        args.only = "decode_sweep"
     print("name,us_per_call,derived")
     for fn in ALL:
         if args.only and args.only not in fn.__name__:

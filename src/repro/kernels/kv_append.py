@@ -1,0 +1,96 @@
+"""In-place KV append Pallas TPU kernel — the paged write path.
+
+Each new token's K/V is written straight into its pool page slot: one
+page-slot write per token, O(1) HBM traffic per generated token, instead of
+the O(context) gather/scatter round trip of the contiguous staging path
+(DESIGN.md §9). The pools are aliased to the outputs so only the targeted
+slots are touched.
+
+Rows flagged invalid (batch padding from bucketing, or chunk padding past a
+request's real token range) must never corrupt live pages. Their page id is
+still used as the DMA target — the caller MUST point it at a write-discard
+page (the engine's reserved scratch page) that no valid row in the same
+call writes. The kernel then copies that slot's content back instead of
+writing the padding K/V. Clamping invalid rows onto a fixed slot like
+(0, 0) would be wrong: page 0 is ordinarily allocatable, and when a valid
+write to a slot is followed by an invalid row resolving to the same block
+index, the pipeline may reuse the stale prefetched input block and the
+"no-op" copy-back would overwrite the fresh value. Routing invalids to a
+dedicated discard page makes the stale rewrite harmless by construction
+(the discard page holds garbage; several invalid rows aliasing it are fine
+— the TPU grid is sequential).
+
+Grid: (n_rows,); page id / offset / valid flag are scalar-prefetch operands
+so the DMA destination of row i is known while row i-1 is in flight.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _append_kernel(page_ids, offsets, valid,            # scalar prefetch
+                   k_pool_ref, v_pool_ref, k_ref, v_ref, k_out, v_out):
+    del page_ids, offsets
+    n = pl.program_id(0)
+
+    @pl.when(valid[n] != 0)
+    def _write():
+        k_out[0, 0] = k_ref[0].astype(k_out.dtype)
+        v_out[0, 0] = v_ref[0].astype(v_out.dtype)
+
+    @pl.when(valid[n] == 0)
+    def _discard():                 # padded row: rewrite the slot unchanged
+        k_out[...] = k_pool_ref[...]
+        v_out[...] = v_pool_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def kv_append(k_pool, v_pool, k_new, v_new, page_ids, offsets, valid, *,
+              interpret=None):
+    """Scatter new K/V rows into their pool page slots.
+
+    k_pool/v_pool: (n_pages, page, Hkv, hd); k_new/v_new: (N, Hkv, hd);
+    page_ids/offsets/valid: (N,) int32. Row i writes k_new[i]/v_new[i] into
+    pool slot (page_ids[i], offsets[i]) iff valid[i] != 0; invalid rows
+    have their K/V discarded, but their (page_ids[i], offsets[i]) is still
+    the DMA target and MUST name a write-discard page no valid row of the
+    same call writes (see module docstring). Returns the updated
+    (k_pool, v_pool); the inputs are aliased to the outputs.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    N = k_new.shape[0]
+    _, _, Hkv, hd = k_pool.shape
+
+    def slot(n, ids, offs, val):
+        del val
+        return (ids[n], offs[n], 0, 0)
+
+    def row(n, ids, offs, val):
+        del ids, offs, val
+        return (n, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(N,),
+        in_specs=[
+            pl.BlockSpec((1, 1, Hkv, hd), slot),     # k_pool (read-back)
+            pl.BlockSpec((1, 1, Hkv, hd), slot),     # v_pool (read-back)
+            pl.BlockSpec((1, Hkv, hd), row),         # k_new
+            pl.BlockSpec((1, Hkv, hd), row),         # v_new
+        ],
+        out_specs=[pl.BlockSpec((1, 1, Hkv, hd), slot),
+                   pl.BlockSpec((1, 1, Hkv, hd), slot)],
+    )
+    return pl.pallas_call(
+        _append_kernel, grid_spec=grid_spec,
+        out_shape=(jax.ShapeDtypeStruct(k_pool.shape, k_pool.dtype),
+                   jax.ShapeDtypeStruct(v_pool.shape, v_pool.dtype)),
+        input_output_aliases={3: 0, 4: 1},   # pools flow through in place
+        interpret=interpret,
+    )(page_ids, offsets, valid, k_pool, v_pool, k_new, v_new)

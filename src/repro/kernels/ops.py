@@ -13,13 +13,15 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.kv_append import kv_append
 from repro.kernels.paged_attention import paged_attention
 from repro.kernels.gla_scan import gla_scan
 from repro.kernels.swap_pack import swap_pack, swap_unpack
 
-__all__ = ["flash_attention_op", "paged_attention_op", "swap_pack_op",
-           "swap_unpack_op", "gla_scan_op", "flash_attention",
-           "paged_attention", "swap_pack", "swap_unpack", "gla_scan"]
+__all__ = ["flash_attention_op", "paged_attention_op", "kv_append_op",
+           "swap_pack_op", "swap_unpack_op", "gla_scan_op",
+           "flash_attention", "paged_attention", "kv_append", "swap_pack",
+           "swap_unpack", "gla_scan"]
 
 
 def gla_scan_op(q, k, v, log_a, *, chunk=128, use_pallas=None,
@@ -45,14 +47,28 @@ def flash_attention_op(q, k, v, *, causal=True, window=None, softcap=None,
 
 
 def paged_attention_op(q, k_pool, v_pool, block_tables, ctx_lens, *,
-                       softcap=None, use_pallas=None, interpret=None):
+                       softcap=None, window=None, use_pallas=None,
+                       interpret=None):
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
     if use_pallas:
         return paged_attention(q, k_pool, v_pool, block_tables, ctx_lens,
-                               softcap=softcap, interpret=interpret)
+                               softcap=softcap, window=window,
+                               interpret=interpret)
     return ref.paged_attention_ref(q, k_pool, v_pool, block_tables, ctx_lens,
-                                   softcap=softcap)
+                                   softcap=softcap, window=window)
+
+
+def kv_append_op(k_pool, v_pool, k_new, v_new, page_ids, offsets, valid, *,
+                 use_pallas=None, interpret=None):
+    """In-place scatter of new token K/V rows into pool page slots."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return kv_append(k_pool, v_pool, k_new, v_new, page_ids, offsets,
+                         valid, interpret=interpret)
+    return ref.kv_append_ref(k_pool, v_pool, k_new, v_new, page_ids,
+                             offsets, valid)
 
 
 def swap_pack_op(pool, page_ids, *, use_pallas=None, interpret=None):

@@ -27,7 +27,7 @@ NEG_INF = -1e30
 
 def _paged_kernel(block_tables, ctx_lens,          # scalar-prefetch operands
                   q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
-                  page: int, softcap, scale):
+                  page: int, softcap, scale, window):
     b = pl.program_id(0)
     i = pl.program_id(2)
     n = pl.num_programs(2)
@@ -40,7 +40,13 @@ def _paged_kernel(block_tables, ctx_lens,          # scalar-prefetch operands
 
     ctx = ctx_lens[b]
 
-    @pl.when(i * page < ctx)
+    live = i * page < ctx
+    if window is not None:
+        # the query sits at position ctx-1; pages entirely below the
+        # window's left edge contribute nothing — skip them
+        live = live & ((i + 1) * page > ctx - window)
+
+    @pl.when(live)
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32)               # (G, hd)
         k = k_ref[0, :, 0].astype(jnp.float32)            # (page, hd)
@@ -51,6 +57,8 @@ def _paged_kernel(block_tables, ctx_lens,          # scalar-prefetch operands
             s = softcap * jnp.tanh(s / softcap)
         pos = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) + i * page
         s = jnp.where(pos < ctx, s, NEG_INF)
+        if window is not None:
+            s = jnp.where(pos > ctx - 1 - window, s, NEG_INF)
 
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
@@ -69,11 +77,15 @@ def _paged_kernel(block_tables, ctx_lens,          # scalar-prefetch operands
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("softcap", "scale", "interpret"))
+                   static_argnames=("softcap", "scale", "window",
+                                    "interpret"))
 def paged_attention(q, k_pool, v_pool, block_tables, ctx_lens, *,
-                    softcap=None, scale=None, interpret=None):
+                    softcap=None, scale=None, window=None, interpret=None):
     """q: (B, Hkv, G, hd); pools: (n_pages, page, Hkv, hd);
-    block_tables: (B, max_pages); ctx_lens: (B,). Returns (B, Hkv, G, hd)."""
+    block_tables: (B, max_pages); ctx_lens: (B,). ``window`` (static) keeps
+    only the last ``window`` positions of each context (sliding-window
+    attention); rows with ctx_lens == 0 produce garbage (padding rows).
+    Returns (B, Hkv, G, hd)."""
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     B, Hkv, G, hd = q.shape
@@ -82,7 +94,7 @@ def paged_attention(q, k_pool, v_pool, block_tables, ctx_lens, *,
     scale = scale if scale is not None else 1.0 / math.sqrt(hd)
 
     kernel = functools.partial(_paged_kernel, page=page, softcap=softcap,
-                               scale=scale)
+                               scale=scale, window=window)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, Hkv, max_pages),

@@ -31,11 +31,12 @@ def flash_attention_ref(q, k, v, *, causal=True, window=None,
 
 
 def paged_attention_ref(q, kv_pages_k, kv_pages_v, block_tables, ctx_lens, *,
-                        softcap=None, scale=None):
+                        softcap=None, scale=None, window=None):
     """Decode attention over a paged KV pool.
 
     q: (B, Hkv, G, hd); pools: (n_pages, page, Hkv, hd);
     block_tables: (B, max_pages) int32; ctx_lens: (B,) tokens valid.
+    ``window`` keeps only the last ``window`` positions of each context.
     """
     B, Hkv, G, hd = q.shape
     page = kv_pages_k.shape[1]
@@ -48,11 +49,29 @@ def paged_attention_ref(q, kv_pages_k, kv_pages_v, block_tables, ctx_lens, *,
                    k.astype(jnp.float32)) * scale
     if softcap is not None:
         s = softcap * jnp.tanh(s / softcap)
-    valid = jnp.arange(max_pages * page)[None] < ctx_lens[:, None]
+    j = jnp.arange(max_pages * page)[None]
+    valid = j < ctx_lens[:, None]
+    if window is not None:
+        valid &= j > ctx_lens[:, None] - 1 - window
     s = jnp.where(valid[:, None, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
     return out.astype(q.dtype)
+
+
+def kv_append_ref(k_pool, v_pool, k_new, v_new, page_ids, offsets, valid):
+    """Scatter new K/V rows into pool page slots (kv_append oracle).
+
+    Row i lands at (page_ids[i], offsets[i]) iff valid[i] != 0; invalid
+    rows are dropped entirely (they must never touch any page).
+    """
+    n_pages = k_pool.shape[0]
+    pids = jnp.where(valid != 0, page_ids, n_pages)      # OOB -> dropped
+    k_pool = k_pool.at[pids, offsets].set(k_new.astype(k_pool.dtype),
+                                          mode="drop")
+    v_pool = v_pool.at[pids, offsets].set(v_new.astype(v_pool.dtype),
+                                          mode="drop")
+    return k_pool, v_pool
 
 
 def swap_pack_ref(pool, page_ids):

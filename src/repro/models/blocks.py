@@ -89,6 +89,63 @@ def block_decode(p, cfg: ModelConfig, blk: BlockCfg, x, cache, ctx):
     return x + h.astype(x.dtype), state
 
 
+def block_decode_paged(p, cfg: ModelConfig, blk: BlockCfg, x, pool, ctx):
+    """Single-token pass over the shared paged pool (DESIGN.md §9).
+
+    x: (B, d); pool: this block's page pool (no batch axis — sequences are
+    routed through ctx["block_tables"] / ctx["ctx_lens"]). Returns
+    (x, updated pool). Attention-cache blocks only.
+    """
+    if blk.kind not in ("attn", "shared_attn"):
+        raise ValueError(f"paged execution serves attention blocks, "
+                         f"got {blk.kind}")
+    eps = cfg.norm_eps
+    h, pool = attention.attention_decode_paged(
+        p["attn"], blk.attn, rms_norm(x, p["norm1"], eps), pool,
+        ctx["block_tables"], ctx["ctx_lens"],
+        window_override=ctx.get("window_override", "cfg"),
+        discard_pid=ctx.get("discard_pid"))
+    if blk.post_norms:
+        h = rms_norm(h, p["post_norm1"], eps)
+    x = x + h.astype(x.dtype)
+    xin = rms_norm(x, p["norm2"], eps)
+    if blk.ffn.kind == "moe":
+        h, _ = moe.moe_forward(p["moe"], blk.ffn, xin[:, None])
+        h = h[:, 0]
+    else:
+        h = mlp.mlp_forward(p["mlp"], blk.ffn, xin)
+    if blk.post_norms:
+        h = rms_norm(h, p["post_norm2"], eps)
+    return x + h.astype(x.dtype), pool
+
+
+def block_extend_paged(p, cfg: ModelConfig, blk: BlockCfg, x, pool, ctx):
+    """Chunked-prefill pass writing pool pages in place. x: (B, T, d) at
+    positions ctx["start"][b] + t; only the first ctx["n_new"][b] tokens
+    per row are real. Returns (x, updated pool, aux)."""
+    if blk.kind not in ("attn", "shared_attn"):
+        raise ValueError(f"paged execution serves attention blocks, "
+                         f"got {blk.kind}")
+    eps = cfg.norm_eps
+    aux = jnp.zeros((), jnp.float32)
+    h, pool = attention.attention_extend_paged(
+        p["attn"], blk.attn, rms_norm(x, p["norm1"], eps), pool,
+        ctx["block_tables"], ctx["start"], ctx["n_new"],
+        window_override=ctx.get("window_override", "cfg"),
+        discard_pid=ctx.get("discard_pid"))
+    if blk.post_norms:
+        h = rms_norm(h, p["post_norm1"], eps)
+    x = x + h.astype(x.dtype)
+    if blk.ffn.kind == "moe":
+        h, aux = moe.moe_forward(p["moe"], blk.ffn,
+                                 rms_norm(x, p["norm2"], eps))
+    else:
+        h = mlp.mlp_forward(p["mlp"], blk.ffn, rms_norm(x, p["norm2"], eps))
+    if blk.post_norms:
+        h = rms_norm(h, p["post_norm2"], eps)
+    return x + h.astype(x.dtype), pool, aux
+
+
 def block_extend(p, cfg: ModelConfig, blk: BlockCfg, x, cache, ctx):
     """Chunked-prefill pass: x (B, T, d) appended at positions
     ctx["start"][b] + t, attending to the cached prefix. Returns

@@ -252,6 +252,100 @@ class LM:
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         return self.logits(params, x), tuple(new_caches)
 
+    def decode_step_paged(self, params, tokens, ctx_lens, pools,
+                          block_tables, *, embeds=None,
+                          window_override="cfg", discard_pid=None):
+        """In-place paged decode (DESIGN.md §9): one new token per sequence
+        written directly into the shared page pools and attended through
+        per-request block tables — no contiguous per-request cache exists.
+
+        tokens: (B,) int32 (or (B, K) audio; or None with embeds (B, d));
+        ctx_lens: (B,) int32 context length INCLUDING the new token (0
+        marks a padding row — nothing is written, logits are garbage);
+        pools: the pytree from init_cache(n_pages, page_size);
+        block_tables: (B, max_pages) int32; discard_pid names the caller's
+        write-discard page for masked appends on the Pallas path (None
+        falls back to drop-mode XLA scatters everywhere).
+        Returns (logits, new_pools).
+        """
+        cfg = self.cfg
+        if tokens is not None:
+            tok = tokens[:, None] if tokens.ndim == 1 else tokens[:, None, :]
+            x = self.embed(params, tok)[:, 0]
+        else:
+            x = embeds
+        ctx = {"block_tables": block_tables, "ctx_lens": ctx_lens,
+               "window_override": window_override,
+               "discard_pid": discard_pid}
+        shared = params.get("shared")
+        new_pools = []
+
+        for gi, g in enumerate(cfg.groups):
+            period = g.period
+
+            def body(xx, inp, period=period):
+                per_params, pool_p = inp
+                new_p = {}
+                for j, blk in enumerate(period):
+                    pj = shared if blk.kind == "shared_attn" \
+                        else per_params[f"b{j}"]
+                    xx, pool_j = B.block_decode_paged(pj, cfg, blk, xx,
+                                                      pool_p[f"b{j}"], ctx)
+                    new_p[f"b{j}"] = pool_j
+                return xx, new_p
+
+            x, pools_g = jax.lax.scan(
+                body, x, (params["groups"][gi]["scan"], pools[gi]))
+            new_pools.append(pools_g)
+
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return self.logits(params, x), tuple(new_pools)
+
+    def extend_step_paged(self, params, tokens, start, n_new, pools,
+                          block_tables, *, embeds=None,
+                          window_override="cfg", logits_index=None,
+                          discard_pid=None):
+        """In-place paged chunked prefill: the chunk's K/V pages are written
+        as they are computed; tokens past n_new[b] are bucket padding whose
+        writes are dropped. All written positions must fit the block table
+        (start + T <= max_pages * page_size). Returns (logits at
+        logits_index — default the last position — and the new pools)."""
+        cfg = self.cfg
+        x = self.embed(params, tokens) if tokens is not None else embeds
+        ctx = {"block_tables": block_tables, "start": start, "n_new": n_new,
+               "window_override": window_override,
+               "discard_pid": discard_pid}
+        shared = params.get("shared")
+        new_pools = []
+
+        for gi, g in enumerate(cfg.groups):
+            period = g.period
+
+            def body(carry, inp, period=period):
+                xx, aa = carry
+                per_params, pool_p = inp
+                new_p = {}
+                for j, blk in enumerate(period):
+                    pj = shared if blk.kind == "shared_attn" \
+                        else per_params[f"b{j}"]
+                    xx, pool_j, auxj = B.block_extend_paged(
+                        pj, cfg, blk, xx, pool_p[f"b{j}"], ctx)
+                    new_p[f"b{j}"] = pool_j
+                    aa = aa + auxj
+                return (xx, aa), new_p
+
+            (x, _), pools_g = jax.lax.scan(
+                body, (x, jnp.zeros((), jnp.float32)),
+                (params["groups"][gi]["scan"], pools[gi]))
+            new_pools.append(pools_g)
+
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        if logits_index is None:
+            last = x[:, -1]
+        else:
+            last = x[jnp.arange(x.shape[0]), logits_index]
+        return self.logits(params, last), tuple(new_pools)
+
     def extend_step(self, params, tokens, start, cache, *, embeds=None,
                     window_override="cfg", logits_index=None):
         """Chunked prefill / recomputation: append T tokens per sequence at

@@ -6,10 +6,20 @@ model with paged KV storage:
   * KV lives in global paged pools (one pytree mirroring the model's cache
     structure, page-indexed); a BlockManager allocates pages; per-request
     block tables map logical positions to pages.
-  * decode        — batched single-token step over gathered page views
-  * chunks        — chunked prefill / recomputation via LM.extend_step
-  * swap_out/in   — page-granular HBM<->host movement (numpy backing),
-                    the budgeted pipelined swap of §4.1
+  * decode        — paged=True (default): one jitted bucketed-batch call
+                    over the shared pools (LM.decode_step_paged) — each new
+                    token is ONE page-slot write (kv_append) and attention
+                    reads the pool through the block tables. paged=False
+                    keeps the legacy gather path (materialize a contiguous
+                    per-request cache view, decode, scatter back) as the
+                    reference oracle: O(context) HBM traffic per token, the
+                    scatter-cost pathology of §3.2 (DESIGN.md §9).
+  * chunks        — chunked prefill / recomputation; the paged path
+                    (LM.extend_step_paged) writes pages as they are
+                    computed instead of round-tripping the whole table.
+  * swap_out/in   — page-granular HBM<->host movement staged through ONE
+                    contiguous slab per request (the §4.1 coalesced
+                    transfer), numpy backing on this CPU demo path
   * discard/evict — pages freed via the scheduler's on_discard hook
   * prefix cache  — optional (prefix_cache=True): a token-block radix tree
                     (repro.cache) indexes computed pages; admitted/resumed
@@ -17,14 +27,20 @@ model with paged KV storage:
                     recomputing them, discarded/finished contexts are
                     registered, shared pages are copy-on-write, and LRU
                     eviction reclaims cache-only pages under page pressure
-                    (DESIGN.md §8)
+                    (DESIGN.md §8). Both execution paths route every write
+                    through _ensure_writable, so COW forks work unchanged.
 
 Time is virtual (the same cost model as the simulator) so interception
 durations and swap budgets are exact and runs are reproducible; tensor math
-is real. On TPU the decode gather is replaced by the Pallas paged-attention
-kernel (repro.kernels); on this CPU demo path the gather itself is the
-XLA fallback. Generated tokens are greedy-argmax, so runs across scheduling
-policies must produce IDENTICAL token streams — the strongest end-to-end
+is real. On TPU the paged path runs the Pallas paged-attention / kv_append
+kernels (repro.kernels); on CPU it runs a jnp mirror of the contiguous
+math, so paged and gather execution produce bit-identical greedy streams —
+the differential property tests/test_paged_engine.py pins down. The
+``counters`` dict tracks KV bytes *copied between buffers* per phase
+(gathers, scatters, appends — attention's streaming reads are compute,
+not movement), the measurable form of the O(1)-vs-O(context) claim.
+Generated tokens are greedy-argmax, so runs across scheduling policies
+must produce IDENTICAL token streams — the strongest end-to-end
 correctness property of the stack (tested).
 
 Scope: attention-cache architectures (the paper's scope). SSM-state archs
@@ -69,6 +85,7 @@ class Engine:
                  estimator: Optional[DurationEstimator] = None,
                  prefix_cache: bool = False,
                  cache_pages: Optional[int] = None,
+                 paged: bool = True,
                  dtype=jnp.float32):
         for blk in cfg.blocks:
             assert blk.kind in ("attn", "shared_attn"), \
@@ -100,12 +117,49 @@ class Engine:
         self.now = 0.0
         self.finished: List[Request] = []
         self._pending_arrivals = deque()
-        # jitted entry points (stable shapes via bucketing)
+        self.paged = paged
+        # KV bytes copied between buffers, split by phase (DESIGN.md §9):
+        # gather-path decode/prefill round-trip the whole block-table view;
+        # the paged path appends exactly the new tokens' slots.
+        self.counters: Dict[str, int] = {
+            "decode_bytes": 0, "decode_tokens": 0,
+            "prefill_bytes": 0, "prefill_tokens": 0,
+            "swap_bytes": 0, "cow_bytes": 0}
+        # bytes one token position occupies across every layer's pool
+        self.kv_token_bytes = int(sum(
+            leaf.dtype.itemsize * leaf.shape[0]
+            * int(np.prod(leaf.shape[3:], dtype=np.int64))
+            for leaf in jax.tree.leaves(self.pools)))
+        # MLA blocks have no paged decode kernel: their latent pools are
+        # gathered O(context) per step on every backend, and the counters
+        # must say so (GQA-only models: 0, paged decode is truly O(1))
+        self.kv_mla_token_bytes = 0
+        for gi, g in enumerate(cfg.groups):
+            for j, blk in enumerate(g.period):
+                if blk.attn is not None and blk.attn.kind == "mla":
+                    self.kv_mla_token_bytes += int(sum(
+                        leaf.dtype.itemsize * leaf.shape[0]
+                        * int(np.prod(leaf.shape[3:], dtype=np.int64))
+                        for leaf in jax.tree.leaves(self.pools[gi][f"b{j}"])))
+        # jitted entry points (stable shapes via bucketing); pools are
+        # donated on accelerators so the paged update is truly in place
+        donate = () if jax.default_backend() == "cpu" else (3,)
         self._decode_jit = jax.jit(
             lambda p, t, pos, c: self.model.decode_step(p, t, pos, c))
         self._extend_jit = jax.jit(
             lambda p, t, s, c, li: self.model.extend_step(
                 p, t, s, c, logits_index=li))
+        # pad-row appends are routed to the reserved scratch page on the
+        # Pallas path (the kv_append write-discard contract)
+        self._decode_paged_jit = jax.jit(
+            lambda p, t, cl, pools, bt: self.model.decode_step_paged(
+                p, t, cl, pools, bt, discard_pid=self.scratch_page),
+            donate_argnums=donate)
+        self._extend_paged_jit = jax.jit(
+            lambda p, t, s, nn, pools, bt, li: self.model.extend_step_paged(
+                p, t, s, nn, pools, bt, logits_index=li,
+                discard_pid=self.scratch_page),
+            donate_argnums=(4,) if donate else ())
 
     @staticmethod
     def _bucket(n: int) -> int:
@@ -179,6 +233,7 @@ class Engine:
             self.pools = jax.tree.map(
                 lambda leaf: leaf.at[:, dst].set(jnp.take(leaf, src, axis=1)),
                 self.pools)
+            self.counters["cow_bytes"] += self.page * self.kv_token_bytes
         st.pages[pidx] = ("dev", new)
 
     def _device_page_ids(self, st: ReqKV, n_pages: int) -> List[int]:
@@ -208,10 +263,12 @@ class Engine:
                         pad_to: int = 0):
         """Write cache entries at (batch_idx[i], positions[i]) back into the
         pools at the pages given by each request's block table. Padded
-        entries (stable jit shapes) are routed to the scratch page."""
+        entries (stable jit shapes) carry an out-of-range page id and are
+        dropped by the scatter — they must never touch a physical page (two
+        pad rows aliasing one page in a single scatter is unordered)."""
         n = len(positions)
         pad_to = max(pad_to, n)
-        pids = np.full(pad_to, self.scratch_page, np.int64)
+        pids = np.full(pad_to, self.blocks.n_pages, np.int64)  # OOB: dropped
         offs = np.zeros(pad_to, np.int64)
         bidx = np.zeros(pad_to, np.int64)
         pos = np.zeros(pad_to, np.int64)
@@ -225,8 +282,9 @@ class Engine:
         pos = jnp.asarray(pos, jnp.int32)
 
         def s(pool_leaf, cache_leaf):
-            vals = cache_leaf[:, bidx, pos]      # (periods, n, ...)
-            return pool_leaf.at[:, pids, offs].set(vals.astype(pool_leaf.dtype))
+            vals = cache_leaf[:, bidx, pos]      # (periods, pad_to, ...)
+            return pool_leaf.at[:, pids, offs].set(
+                vals.astype(pool_leaf.dtype), mode="drop")
         self.pools = jax.tree.map(s, self.pools, cache)
 
     # ------------------------------------------------------------------
@@ -356,32 +414,56 @@ class Engine:
         self._swap_in_pages = {r.rid: p for r, _, p in new_in}
 
     def _exec_swap_out(self, req: Request):
+        """Stage ALL of the request's outbound pages into one contiguous
+        slab (the swap_pack coalescing of §4.1/DESIGN.md §2 — on TPU this
+        is the Pallas gather kernel) and move it host-side in a single
+        transfer, instead of one DMA per scattered page."""
         st = self.kv[req.rid]
-        for p in self._swap_out_pages.get(req.rid, []):
+        idxs = self._swap_out_pages.get(req.rid, [])
+        if not idxs:
+            return
+        pids = []
+        for p in idxs:
             kind, pid = st.pages[p]
             assert kind == "dev"
-            idx = jnp.asarray(pid, jnp.int32)
-            payload = jax.device_get(
-                jax.tree.map(lambda leaf: jnp.take(leaf, idx, axis=1),
-                             self.pools))
-            st.pages[p] = ("host", payload)
-            self.blocks.free([pid])
+            pids.append(pid)
+        ids = jnp.asarray(pids, jnp.int32)
+        slab = jax.device_get(jax.tree.map(
+            lambda leaf: jnp.take(leaf, ids, axis=1), self.pools))
+        for i, p in enumerate(idxs):
+            st.pages[p] = ("host", jax.tree.map(lambda leaf: leaf[:, i],
+                                                slab))
+        self.blocks.free(pids)
+        self.counters["swap_bytes"] += \
+            len(idxs) * self.page * self.kv_token_bytes
 
     def _exec_swap_in(self, req: Request):
+        """Reassemble the request's inbound pages into one staged slab and
+        scatter it back into freshly allocated pool pages in a single
+        device transfer (swap_unpack on TPU)."""
         st = self.kv[req.rid]
-        for p in self._swap_in_pages.get(req.rid, []):
+        idxs = self._swap_in_pages.get(req.rid, [])
+        if not idxs:
+            return
+        got = self._allocate_pages(len(idxs))
+        if got is None:
+            raise RuntimeError("out of KV pages during swap-in")
+        payloads = []
+        for p in idxs:
             kind, payload = st.pages[p]
             assert kind == "host"
-            got = self._allocate_pages(1)
-            if got is None:
-                raise RuntimeError("out of KV pages during swap-in")
-            pid = got[0]
-            idx = jnp.asarray(pid, jnp.int32)
-            self.pools = jax.tree.map(
-                lambda leaf, val: leaf.at[:, idx].set(
-                    jnp.asarray(val, leaf.dtype)),
-                self.pools, payload)
-            st.pages[p] = ("dev", pid)
+            payloads.append(payload)
+        slab = jax.tree.map(lambda *leaves: np.stack(leaves, axis=1),
+                            *payloads)
+        ids = jnp.asarray(got, jnp.int32)
+        self.pools = jax.tree.map(
+            lambda leaf, val: leaf.at[:, ids].set(
+                jnp.asarray(val, leaf.dtype)),
+            self.pools, slab)
+        for i, p in enumerate(idxs):
+            st.pages[p] = ("dev", got[i])
+        self.counters["swap_bytes"] += \
+            len(idxs) * self.page * self.kv_token_bytes
 
     def _exec_chunk(self, req: Request, n: int):
         st = self.kv[req.rid]
@@ -396,20 +478,31 @@ class Engine:
         bt = np.full((1, self.max_pages), self.scratch_page, np.int64)
         ids = self._device_page_ids(st, len(st.pages))
         bt[0, :len(ids)] = ids
-        cache = self._gather_cache(bt)
-        # pad the chunk to a bucketed length; padding tokens land at
-        # positions > the real range, are causally invisible, and get
-        # overwritten when those positions are actually computed.
+        # pad the chunk to a bucketed length; padding tokens sit at
+        # positions > the real range and are causally invisible. On the
+        # gather path they are written into the throwaway cache view and
+        # not scattered back; on the paged path their writes are dropped.
         ids_list = st.tokens[start:start + n] + [0] * (n_pad - n)
         chunk_ids = jnp.asarray([ids_list], jnp.int32)
         if self.cfg.n_codebooks:
             chunk_ids = jnp.broadcast_to(chunk_ids[..., None],
                                          (1, n_pad, self.cfg.n_codebooks))
-        logits, cache = self._extend_jit(
-            self.params, chunk_ids, jnp.asarray([start], jnp.int32), cache,
-            jnp.asarray([n - 1], jnp.int32))
-        self._scatter_tokens(cache, bt, np.zeros(n, np.int64),
-                             np.arange(start, start + n), pad_to=n_pad)
+        if self.paged:
+            logits, self.pools = self._extend_paged_jit(
+                self.params, chunk_ids, jnp.asarray([start], jnp.int32),
+                jnp.asarray([n], jnp.int32), self.pools,
+                jnp.asarray(bt, jnp.int32), jnp.asarray([n - 1], jnp.int32))
+            self.counters["prefill_bytes"] += n * self.kv_token_bytes
+        else:
+            cache = self._gather_cache(bt)
+            logits, cache = self._extend_jit(
+                self.params, chunk_ids, jnp.asarray([start], jnp.int32),
+                cache, jnp.asarray([n - 1], jnp.int32))
+            self._scatter_tokens(cache, bt, np.zeros(n, np.int64),
+                                 np.arange(start, start + n), pad_to=n_pad)
+            self.counters["prefill_bytes"] += \
+                (self.max_pages * self.page + n) * self.kv_token_bytes
+        self.counters["prefill_tokens"] += n
         st.computed = start + n
         # final chunk of a fresh prefill emits the first generated token
         if st.computed == req.target_ctx and len(st.tokens) == req.target_ctx:
@@ -433,7 +526,6 @@ class Engine:
         for b, st in enumerate(sts):
             ids = self._device_page_ids(st, len(st.pages))
             bt[b, :len(ids)] = ids
-        cache = self._gather_cache(bt)
         pos = np.zeros(B_pad, np.int64)
         pos[:B] = [r.target_ctx for r in reqs]
         feed = np.zeros(B_pad, np.int64)
@@ -442,10 +534,28 @@ class Engine:
         if self.cfg.n_codebooks:
             toks = jnp.broadcast_to(toks[:, None],
                                     (B_pad, self.cfg.n_codebooks))
-        logits, cache = self._decode_jit(
-            self.params, toks, jnp.asarray(pos, jnp.int32), cache)
-        self._scatter_tokens(cache, bt, np.arange(B),
-                             np.asarray(pos[:B]), pad_to=B_pad)
+        if self.paged:
+            # in-place paged decode: ctx_lens counts the new token;
+            # 0 marks a padded row (its pool write is masked in-kernel)
+            cl = np.zeros(B_pad, np.int64)
+            cl[:B] = pos[:B] + 1
+            logits, self.pools = self._decode_paged_jit(
+                self.params, toks, jnp.asarray(cl, jnp.int32), self.pools,
+                jnp.asarray(bt, jnp.int32))
+            # O(1) appends, plus the O(context) latent gather MLA blocks
+            # still pay (no paged decode kernel for MLA yet)
+            self.counters["decode_bytes"] += B * self.kv_token_bytes \
+                + B_pad * self.max_pages * self.page * self.kv_mla_token_bytes
+        else:
+            cache = self._gather_cache(bt)
+            logits, cache = self._decode_jit(
+                self.params, toks, jnp.asarray(pos, jnp.int32), cache)
+            self._scatter_tokens(cache, bt, np.arange(B),
+                                 np.asarray(pos[:B]), pad_to=B_pad)
+            self.counters["decode_bytes"] += \
+                (B_pad * self.max_pages * self.page + B) \
+                * self.kv_token_bytes
+        self.counters["decode_tokens"] += B
         self._decode_logits = np.asarray(jax.device_get(logits))[:B]
         for st, p in zip(sts, pos[:B]):
             st.computed = int(p) + 1
@@ -532,3 +642,14 @@ class Engine:
     def generated_text(self, req: Request) -> List[int]:
         """All token ids of a finished request (prompt + gen + returned)."""
         return list(self.kv[req.rid].tokens)
+
+    def kv_bytes_per_decode_token(self) -> float:
+        """KV bytes copied between buffers per generated token — O(1) page
+        writes on the paged path, O(context) round-trips on the gather
+        oracle (the measurable form of the §3.2 scatter-cost claim)."""
+        return (self.counters["decode_bytes"]
+                / max(1, self.counters["decode_tokens"]))
+
+    def kv_bytes_per_prefill_token(self) -> float:
+        return (self.counters["prefill_bytes"]
+                / max(1, self.counters["prefill_tokens"]))

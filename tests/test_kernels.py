@@ -7,8 +7,16 @@ import pytest
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.kv_append import kv_append
 from repro.kernels.paged_attention import paged_attention
 from repro.kernels.swap_pack import swap_pack, swap_unpack
+
+try:
+    import hypothesis.strategies as hyp_st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:                                  # optional dependency
+    HAVE_HYPOTHESIS = False
 
 KEY = jax.random.PRNGKey(0)
 
@@ -91,6 +99,81 @@ def test_paged_attention_matches_dense_decode():
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
 
 
+@pytest.mark.parametrize("G", [1, 4])
+@pytest.mark.parametrize("ctx", [1, 8, 16, 23, 32])
+def test_paged_attention_ragged_edges(G, ctx):
+    """Explicit ragged ctx_lens edge cases per GQA group size: ctx=1,
+    ctx exactly on a page boundary (8, 16), mid-page (23), and the full
+    page-table width (32 = page * max_pages)."""
+    rng = np.random.default_rng(G * 100 + ctx)
+    Hkv, hd, page, max_pages, n_pages = 2, 32, 8, 4, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (3, Hkv, G, hd))
+    kp = jax.random.normal(ks[1], (n_pages, page, Hkv, hd))
+    vp = jax.random.normal(ks[2], (n_pages, page, Hkv, hd))
+    bt = jnp.asarray(rng.integers(0, n_pages, (3, max_pages)), jnp.int32)
+    # one row at the edge case, the others ragged around it
+    lens = jnp.asarray([ctx, max(1, ctx - 1), min(page * max_pages, ctx + 1)],
+                       jnp.int32)
+    out = paged_attention(q, kp, vp, bt, lens, interpret=True)
+    want = ref.paged_attention_ref(q, kp, vp, bt, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [1, 7, 16])
+def test_paged_attention_sliding_window(window):
+    rng = np.random.default_rng(window)
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 2, 2, 32))
+    kp = jax.random.normal(ks[1], (16, 8, 2, 32))
+    vp = jax.random.normal(ks[2], (16, 8, 2, 32))
+    bt = jnp.asarray(rng.integers(0, 16, (2, 4)), jnp.int32)
+    lens = jnp.asarray([29, 5], jnp.int32)
+    out = paged_attention(q, kp, vp, bt, lens, window=window,
+                          interpret=True)
+    want = ref.paged_attention_ref(q, kp, vp, bt, lens, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("N", [1, 4, 9])
+def test_kv_append_matches_ref(dtype, N):
+    rng = np.random.default_rng(N)
+    n_pages, page, Hkv, hd = 12, 8, 2, 16
+    ks = jax.random.split(KEY, 4)
+    kp = jax.random.normal(ks[0], (n_pages, page, Hkv, hd)).astype(dtype)
+    vp = jax.random.normal(ks[1], (n_pages, page, Hkv, hd)).astype(dtype)
+    kn = jax.random.normal(ks[2], (N, Hkv, hd)).astype(dtype)
+    vn = jax.random.normal(ks[3], (N, Hkv, hd)).astype(dtype)
+    # distinct live slots; rows randomly flagged invalid keep their slot
+    # index (in interpret mode the kernel's copy-back is content-preserving,
+    # matching the ref's drop semantics bit-for-bit)
+    slots = rng.choice(n_pages * page, N, replace=False)
+    ids = jnp.asarray(slots // page, jnp.int32)
+    offs = jnp.asarray(slots % page, jnp.int32)
+    valid = jnp.asarray(rng.integers(0, 2, N), jnp.int32)
+    got_k, got_v = kv_append(kp, vp, kn, vn, ids, offs, valid,
+                             interpret=True)
+    want_k, want_v = ref.kv_append_ref(kp, vp, kn, vn, ids, offs, valid)
+    assert jnp.array_equal(got_k, want_k) and jnp.array_equal(got_v, want_v)
+
+
+def test_kv_append_invalid_rows_leave_pool_untouched():
+    """All-invalid append (a fully padded bucket): the pools must come back
+    bit-identical even when several invalid rows alias the same slot."""
+    ks = jax.random.split(KEY, 4)
+    kp = jax.random.normal(ks[0], (6, 4, 2, 8))
+    vp = jax.random.normal(ks[1], (6, 4, 2, 8))
+    kn = jax.random.normal(ks[2], (5, 2, 8))
+    vn = jax.random.normal(ks[3], (5, 2, 8))
+    ids = jnp.asarray([2, 2, 2, 5, 0], jnp.int32)
+    offs = jnp.asarray([1, 1, 3, 0, 0], jnp.int32)
+    valid = jnp.zeros(5, jnp.int32)
+    got_k, got_v = kv_append(kp, vp, kn, vn, ids, offs, valid,
+                             interpret=True)
+    assert jnp.array_equal(got_k, kp) and jnp.array_equal(got_v, vp)
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int8])
 @pytest.mark.parametrize("n_move", [1, 5, 16])
 def test_swap_pack_unpack_roundtrip(dtype, n_move):
@@ -129,3 +212,39 @@ def test_gla_scan_kernel(B, H, T, dk, dv, c, dtype):
     np.testing.assert_allclose(np.asarray(y, np.float32),
                                np.asarray(y_ref, np.float32), atol=tol)
     np.testing.assert_allclose(np.asarray(S), np.asarray(S_ref), atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# swap pack/unpack roundtrip property (hypothesis; skipped when absent)
+# ---------------------------------------------------------------------------
+if HAVE_HYPOTHESIS:
+    # shapes drawn from a small fixed set so pallas interpret-mode programs
+    # hit the jit cache across examples
+    @settings(max_examples=15, deadline=None)
+    @given(
+        shape=hyp_st.sampled_from([(12, 4, 1, 8), (24, 8, 2, 16)]),
+        seed=hyp_st.integers(0, 2**16 - 1),
+        frac=hyp_st.floats(0.05, 1.0),
+    )
+    def test_swap_roundtrip_property(shape, seed, frac):
+        """For ANY page subset: pack -> clobber -> unpack restores the pool
+        bit-exactly, and pages outside the subset are never touched."""
+        rng = np.random.default_rng(seed)
+        n_pages = shape[0]
+        n_move = max(1, int(frac * n_pages))
+        pool = jnp.asarray(rng.normal(size=shape), jnp.float32)
+        ids_np = rng.choice(n_pages, n_move, replace=False)
+        ids = jnp.asarray(ids_np, jnp.int32)
+        staged = swap_pack(pool, ids, interpret=True)
+        assert jnp.array_equal(staged, pool[ids])
+        clobbered = swap_unpack(pool, jnp.zeros_like(staged), ids,
+                                interpret=True)
+        untouched = np.setdiff1d(np.arange(n_pages), ids_np)
+        assert jnp.array_equal(clobbered[untouched], pool[untouched])
+        assert jnp.array_equal(clobbered[ids], jnp.zeros_like(staged))
+        restored = swap_unpack(clobbered, staged, ids, interpret=True)
+        assert jnp.array_equal(restored, pool)
+else:                                                # pragma: no cover
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_swap_roundtrip_property():
+        pass
