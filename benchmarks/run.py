@@ -374,6 +374,76 @@ def bench_decode_sweep(quick=False):
         json.dump(results, f, indent=2)
 
 
+def bench_mixed_sweep(quick=False):
+    """Fused mixed-batch iteration vs the unfused per-call path
+    (DESIGN.md §10) on a bursty agent workload whose iterations carry
+    prefill chunks AND decode batches at once: device dispatches per
+    non-empty iteration, decode throughput, and logit bytes crossing the
+    host boundary per step; greedy token streams are asserted identical
+    between the two paths. Writes benchmarks/mixed_sweep.json."""
+    import json
+    import os
+    from repro.configs import get_config
+    from repro.core import POLICIES
+    from repro.serving.engine import Engine
+    from repro.serving.workloads import make_agent_workload
+
+    cfg = get_config("llama3.2-1b", tiny=True)
+    sessions = [2, 4] if quick else [2, 4, 6]
+    results = []
+    for n_sessions in sessions:
+        reqs = make_agent_workload(
+            seed=7, n_sessions=n_sessions, rate_rps=500.0,
+            vocab=cfg.vocab_size, n_templates=2, system_prompt_len=50,
+            turns=(2, 2), turn_gap_s=0.01, hist_per_turn=12,
+            prefix_share=0.75, gen_tokens=(10, 3), final_gen=(10, 3),
+            ret_tokens=(6, 2), max_tool_calls=2, max_ctx=240)
+        streams = {}
+        rows = {}
+        for mode in ("fused", "unfused"):
+            eng = Engine(cfg, POLICIES["vllm"], page_size=16,
+                         n_pages=64 * n_sessions, max_model_len=256,
+                         paged=True, fused=(mode == "fused"))
+            for r in copy.deepcopy(reqs):
+                eng.add_request(r)
+            t0 = time.time()
+            fin = eng.run()
+            wall = time.time() - t0
+            assert len(fin) == len(reqs), f"{mode} x{n_sessions} incomplete"
+            streams[mode] = {r.rid: eng.generated_text(r) for r in fin}
+            c = eng.counters
+            iters = max(1, c["mixed_iterations"])
+            rows[mode] = {
+                "n_sessions": n_sessions,
+                "mode": mode,
+                "mixed_iterations": c["mixed_iterations"],
+                "device_dispatches": c["device_dispatches"],
+                "dispatches_per_iteration":
+                    round(c["device_dispatches"] / iters, 3),
+                "logit_bytes_per_step":
+                    round(c["logit_bytes"] / iters, 1),
+                "decode_tokens": c["decode_tokens"],
+                "tokens_per_s":
+                    round((c["decode_tokens"] + c["prefill_tokens"])
+                          / max(1e-9, wall), 2),
+                "wall_s": round(wall, 3),
+            }
+        identical = streams["fused"] == streams["unfused"]
+        for mode in ("fused", "unfused"):
+            rows[mode]["streams_identical"] = identical
+            results.append(rows[mode])
+            _row(f"mixed_sweep_x{n_sessions}_{mode}",
+                 rows[mode]["wall_s"] * 1e6,
+                 {k: v for k, v in rows[mode].items()
+                  if k not in ("n_sessions", "mode", "wall_s")})
+        assert identical, f"fused/unfused streams diverged x{n_sessions}"
+        assert rows["fused"]["dispatches_per_iteration"] == 1.0
+    out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "mixed_sweep.json")
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2)
+
+
 def bench_multi_gpu_scaling(quick=False):
     """13B on 1 vs 2 GPUs, 70B on 4 (paper §5.1: distributed setting gains
     grow because more HBM per GPU is left for KV)."""
@@ -401,7 +471,7 @@ def bench_multi_gpu_scaling(quick=False):
 ALL = [bench_table1_workload, bench_fig2_end2end, bench_fig3_breakdown,
        bench_waste_s32, bench_estimator, bench_single_augment,
        bench_kernels, bench_multi_gpu_scaling, bench_prefix_cache_sweep,
-       bench_decode_sweep]
+       bench_decode_sweep, bench_mixed_sweep]
 
 
 def main() -> None:
@@ -411,9 +481,14 @@ def main() -> None:
     ap.add_argument("--decode-sweep", action="store_true",
                     help="run only the paged-vs-gather decode sweep "
                          "(alias for --only decode_sweep)")
+    ap.add_argument("--mixed-sweep", action="store_true",
+                    help="run only the fused-vs-unfused mixed-batch sweep "
+                         "(alias for --only mixed_sweep)")
     args = ap.parse_args()
     if args.decode_sweep:
         args.only = "decode_sweep"
+    if args.mixed_sweep:
+        args.only = "mixed_sweep"
     print("name,us_per_call,derived")
     for fn in ALL:
         if args.only and args.only not in fn.__name__:

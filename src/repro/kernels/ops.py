@@ -15,13 +15,15 @@ from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.kv_append import kv_append
 from repro.kernels.paged_attention import paged_attention
+from repro.kernels.ragged_paged_attention import ragged_paged_attention
 from repro.kernels.gla_scan import gla_scan
 from repro.kernels.swap_pack import swap_pack, swap_unpack
 
-__all__ = ["flash_attention_op", "paged_attention_op", "kv_append_op",
+__all__ = ["flash_attention_op", "paged_attention_op",
+           "ragged_paged_attention_op", "kv_append_op",
            "swap_pack_op", "swap_unpack_op", "gla_scan_op",
-           "flash_attention", "paged_attention", "kv_append", "swap_pack",
-           "swap_unpack", "gla_scan"]
+           "flash_attention", "paged_attention", "ragged_paged_attention",
+           "kv_append", "swap_pack", "swap_unpack", "gla_scan"]
 
 
 def gla_scan_op(q, k, v, log_a, *, chunk=128, use_pallas=None,
@@ -57,6 +59,21 @@ def paged_attention_op(q, k_pool, v_pool, block_tables, ctx_lens, *,
                                interpret=interpret)
     return ref.paged_attention_ref(q, k_pool, v_pool, block_tables, ctx_lens,
                                    softcap=softcap, window=window)
+
+
+def ragged_paged_attention_op(q, k_pool, v_pool, block_tables, tok_seq,
+                              tok_pos, *, softcap=None, window=None,
+                              use_pallas=None, interpret=None):
+    """Mixed-batch ragged-query attention (chunk + decode tokens flattened)."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return ragged_paged_attention(q, k_pool, v_pool, block_tables,
+                                      tok_seq, tok_pos, softcap=softcap,
+                                      window=window, interpret=interpret)
+    return ref.ragged_paged_attention_ref(q, k_pool, v_pool, block_tables,
+                                          tok_seq, tok_pos, softcap=softcap,
+                                          window=window)
 
 
 def kv_append_op(k_pool, v_pool, k_new, v_new, page_ids, offsets, valid, *,

@@ -1,0 +1,137 @@
+"""Ragged-query paged-attention Pallas TPU kernel — the fused mixed-batch
+iteration's attention core (DESIGN.md §10).
+
+One scheduler iteration's *entire* query workload — every prefill chunk's
+tokens and every decode's single token — arrives as one flat ragged batch of
+N tokens. Token i belongs to sequence ``tok_seq[i]`` and sits at absolute
+position ``tok_pos[i]``; it attends to that sequence's KV pages through
+``block_tables[tok_seq[i]]`` with the causal mask ``kv position <=
+tok_pos[i]``. Because every new token's K/V was appended to the pool before
+this kernel runs, that single mask covers both cases at once: a decode
+token (query length 1) sees its whole context including itself, and a chunk
+token sees the prefix plus the earlier tokens *of its own chunk* — the
+chunk-internal causal contract — while later chunk tokens and every other
+sequence's pages are invisible.
+
+This generalizes ``paged_attention`` (which fixes query length 1 per
+sequence and takes per-sequence ctx_lens) to per-*token* context bounds,
+so one kernel launch serves the whole mixed iteration. Padded token rows
+carry ``tok_pos[i] == -1``: no page is live for them, their output is
+zeros, and the caller ignores it.
+
+Layout: q (N, Hkv, G, hd); pools (n_pages, page, Hkv, hd);
+block_tables (B, max_pages) int32; tok_seq/tok_pos (N,) int32.
+Grid: (N, Hkv, max_pages), pages innermost; block table, tok_seq, and
+tok_pos are scalar-prefetch operands so the HBM->VMEM DMA for page
+``block_tables[tok_seq[n], i]`` issues while the MXU works on page i-1.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _ragged_kernel(block_tables, tok_seq, tok_pos,  # scalar-prefetch operands
+                   q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                   page: int, softcap, scale, window):
+    del block_tables, tok_seq
+    n = pl.program_id(0)
+    i = pl.program_id(2)
+    npages = pl.num_programs(2)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    ctx = tok_pos[n] + 1                 # this token sees positions < ctx
+
+    live = i * page < ctx
+    if window is not None:
+        # the query sits at position ctx-1; pages entirely below the
+        # window's left edge contribute nothing — skip them
+        live = live & ((i + 1) * page > ctx - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)               # (G, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)            # (page, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        pos = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) + i * page
+        s = jnp.where(pos < ctx, s, NEG_INF)
+        if window is not None:
+            s = jnp.where(pos > ctx - 1 - window, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(i == npages - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-37)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("softcap", "scale", "window",
+                                    "interpret"))
+def ragged_paged_attention(q, k_pool, v_pool, block_tables, tok_seq,
+                           tok_pos, *, softcap=None, scale=None, window=None,
+                           interpret=None):
+    """q: (N, Hkv, G, hd) flat mixed-batch query tokens; pools:
+    (n_pages, page, Hkv, hd); block_tables: (B, max_pages); tok_seq (N,)
+    int32 names each token's sequence (block-table row); tok_pos (N,) int32
+    is its absolute position (-1 marks a padded token row — output zeros).
+    ``window`` (static) keeps only the last ``window`` positions visible.
+    Returns (N, Hkv, G, hd)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    N, Hkv, G, hd = q.shape
+    n_pages, page, _, _ = k_pool.shape
+    max_pages = block_tables.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(_ragged_kernel, page=page, softcap=softcap,
+                               scale=scale, window=window)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(N, Hkv, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd),
+                         lambda n, h, i, bt, ts, tp: (n, h, 0, 0)),
+            pl.BlockSpec((1, page, 1, hd),
+                         lambda n, h, i, bt, ts, tp: (bt[ts[n], i], 0, h, 0)),
+            pl.BlockSpec((1, page, 1, hd),
+                         lambda n, h, i, bt, ts, tp: (bt[ts[n], i], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda n, h, i, bt, ts, tp: (n, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(block_tables, tok_seq, tok_pos, q, k_pool, v_pool)

@@ -59,6 +59,38 @@ def paged_attention_ref(q, kv_pages_k, kv_pages_v, block_tables, ctx_lens, *,
     return out.astype(q.dtype)
 
 
+def ragged_paged_attention_ref(q, kv_pages_k, kv_pages_v, block_tables,
+                               tok_seq, tok_pos, *, softcap=None, scale=None,
+                               window=None):
+    """Ragged-query attention over a paged KV pool (mixed-batch oracle).
+
+    q: (N, Hkv, G, hd) flat tokens; pools: (n_pages, page, Hkv, hd);
+    block_tables: (B, max_pages) int32; tok_seq (N,) names each token's
+    block-table row; tok_pos (N,) its absolute position (-1 = padded row,
+    output garbage). Token i sees kv positions <= tok_pos[i] of its own
+    sequence only; ``window`` keeps the last ``window`` of those.
+    """
+    N, Hkv, G, hd = q.shape
+    page = kv_pages_k.shape[1]
+    max_pages = block_tables.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    bt = block_tables[tok_seq]                           # (N, max_pages)
+    k = kv_pages_k[bt].reshape(N, max_pages * page, Hkv, hd)
+    v = kv_pages_v[bt].reshape(N, max_pages * page, Hkv, hd)
+    s = jnp.einsum("bhgd,bshd->bhgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    j = jnp.arange(max_pages * page)[None]
+    valid = j <= tok_pos[:, None]
+    if window is not None:
+        valid &= j > tok_pos[:, None] - window
+    s = jnp.where(valid[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
 def kv_append_ref(k_pool, v_pool, k_new, v_new, page_ids, offsets, valid):
     """Scatter new K/V rows into pool page slots (kv_append oracle).
 

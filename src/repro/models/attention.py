@@ -603,6 +603,130 @@ def mla_extend_paged(p, a: AttentionCfg, x, pool, block_tables, start,
                                                        "kr": kr_pool}
 
 
+# ==========================================================================
+# Fused mixed-batch pass (ragged chunks + decodes in one dispatch; §10)
+# ==========================================================================
+# One scheduler iteration's whole token workload arrives flattened: token i
+# belongs to sequence tok_seq[i] at absolute position tok_pos[i] (-1 marks a
+# padded row). All N tokens' K/V are appended to the pool in ONE kv_append
+# call, then each token attends through its sequence's block table with the
+# causal mask `kv pos <= tok_pos[i]` — which simultaneously gives decode
+# tokens their full context and chunk tokens the prefix plus the earlier
+# tokens of their own chunk (the chunk-internal causal contract). The jnp
+# mirror repeats gqa_decode_paged's per-row math op-for-op with N rows, so
+# the fused pass emits bit-identical logits to the per-call paths on CPU —
+# the fused-vs-unfused differential property.
+
+def gqa_mixed_paged(p, a: AttentionCfg, x, pool, block_tables, tok_seq,
+                    tok_pos, *, window_override="cfg", discard_pid=None):
+    """x: (N, d) flat mixed-batch tokens; pool {"k","v"}:
+    (n_pages, page, Hkv, hd); block_tables: (B, max_pages) int32;
+    tok_seq/tok_pos: (N,) int32 (tok_pos == -1 marks a padded row: its K/V
+    write is dropped and its output is garbage). Returns (out (N, d),
+    updated pool)."""
+    from repro.kernels.ops import kv_append_op, ragged_paged_attention_op
+    window = effective_window(a, window_override)
+    N, d = x.shape
+    n_pages, page, Hkv, hd = pool["k"].shape
+    S = block_tables.shape[1] * page
+    valid = tok_pos >= 0
+    pos = jnp.maximum(tok_pos, 0)
+    q = jnp.einsum("bd,dhk->bhk", x, p["wq"])
+    k = jnp.einsum("bd,dhk->bhk", x, p["wk"])
+    v = jnp.einsum("bd,dhk->bhk", x, p["wv"])
+    if a.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = apply_rope(q[:, None], pos[:, None], a.rope_theta)[:, 0]
+    k = apply_rope(k[:, None], pos[:, None], a.rope_theta)[:, 0]
+
+    bt_tok = block_tables[tok_seq]                       # (N, max_pages)
+    pids = jnp.take_along_axis(bt_tok, (pos // page)[:, None], axis=1)[:, 0]
+    offs = pos % page
+    G = a.n_heads // Hkv
+    use_pallas = _paged_use_pallas() and discard_pid is not None
+    if use_pallas:
+        pids = jnp.where(valid, pids, discard_pid)
+    k_pool, v_pool = kv_append_op(
+        pool["k"], pool["v"], k, v, pids.astype(jnp.int32),
+        offs.astype(jnp.int32), valid.astype(jnp.int32),
+        use_pallas=use_pallas)
+    if _paged_use_pallas():
+        out = ragged_paged_attention_op(
+            q.reshape(N, Hkv, G, hd), k_pool, v_pool, block_tables,
+            tok_seq.astype(jnp.int32), tok_pos.astype(jnp.int32),
+            softcap=a.logit_softcap, window=window, use_pallas=True)
+    else:
+        k_cache = k_pool[bt_tok].reshape(N, S, Hkv, hd)
+        v_cache = v_pool[bt_tok].reshape(N, S, Hkv, hd)
+        qh = q.reshape(N, Hkv, G, hd).astype(jnp.float32)
+        s = jnp.einsum("bhgk,bshk->bhgs", qh,
+                       k_cache.astype(jnp.float32)) / math.sqrt(hd)
+        if a.logit_softcap is not None:
+            s = softcap(s, a.logit_softcap)
+        j = jnp.arange(S)[None, :]
+        live = j <= tok_pos[:, None]
+        if window is not None:
+            live &= j > tok_pos[:, None] - window
+        s = jnp.where(live[:, None, None, :], s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhgs,bshk->bhgk", w, v_cache.astype(jnp.float32))
+    out = out.reshape(N, a.n_heads, hd).astype(x.dtype)
+    return jnp.einsum("bhk,hkd->bd", out, p["wo"]), {"k": k_pool,
+                                                     "v": v_pool}
+
+
+def mla_mixed_paged(p, a: AttentionCfg, x, pool, block_tables, tok_seq,
+                    tok_pos, *, window_override="cfg", discard_pid=None):
+    """Absorbed MLA mixed-batch pass over paged latent pools (drop-mode XLA
+    scatter + O(context) latent gather on every backend, mirroring
+    mla_decode_paged — ``discard_pid`` is unused)."""
+    window = effective_window(a, window_override)
+    N, d = x.shape
+    n_pages, page, _ = pool["c"].shape
+    S = block_tables.shape[1] * page
+    valid = tok_pos >= 0
+    pos = jnp.maximum(tok_pos, 0)
+    qn, qr = _mla_q(p, a, x[:, None], pos[:, None])
+    qn, qr = qn[:, 0], qr[:, 0]
+    c_new, kr_new = _mla_latent(p, a, x[:, None], pos[:, None])
+
+    bt_tok = block_tables[tok_seq]                       # (N, max_pages)
+    pids = jnp.take_along_axis(bt_tok, (pos // page)[:, None], axis=1)[:, 0]
+    pids = jnp.where(valid, pids, n_pages)
+    offs = pos % page
+    c_pool = pool["c"].at[pids, offs].set(
+        c_new[:, 0].astype(pool["c"].dtype), mode="drop")
+    kr_pool = pool["kr"].at[pids, offs].set(
+        kr_new[:, 0].astype(pool["kr"].dtype), mode="drop")
+
+    c_cache = c_pool[bt_tok].reshape(N, S, -1)
+    kr_cache = kr_pool[bt_tok].reshape(N, S, -1)
+    q_lat = jnp.einsum("bhn,lhn->bhl", qn.astype(jnp.float32),
+                       p["w_uk"].astype(jnp.float32))
+    qk = a.qk_nope_head_dim + a.qk_rope_head_dim
+    s = (jnp.einsum("bhl,bsl->bhs", q_lat, c_cache.astype(jnp.float32))
+         + jnp.einsum("bhr,bsr->bhs", qr.astype(jnp.float32),
+                      kr_cache.astype(jnp.float32))) / math.sqrt(qk)
+    j = jnp.arange(S)[None, :]
+    live = j <= tok_pos[:, None]
+    if window is not None:
+        live &= j > tok_pos[:, None] - window
+    s = jnp.where(live[:, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    ctxv = jnp.einsum("bhs,bsl->bhl", w, c_cache.astype(jnp.float32))
+    out = jnp.einsum("bhl,lhv->bhv", ctxv,
+                     p["w_uv"].astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bhv,hvd->bd", out, p["wo"]), {"c": c_pool,
+                                                     "kr": kr_pool}
+
+
+def attention_mixed_paged(p, a, x, pool, block_tables, tok_seq, tok_pos, *,
+                          window_override="cfg", discard_pid=None):
+    fn = mla_mixed_paged if a.kind == "mla" else gqa_mixed_paged
+    return fn(p, a, x, pool, block_tables, tok_seq, tok_pos,
+              window_override=window_override, discard_pid=discard_pid)
+
+
 def attention_decode_paged(p, a, x, pool, block_tables, ctx_lens, *,
                            window_override="cfg", discard_pid=None):
     fn = mla_decode_paged if a.kind == "mla" else gqa_decode_paged

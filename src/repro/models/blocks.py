@@ -119,6 +119,37 @@ def block_decode_paged(p, cfg: ModelConfig, blk: BlockCfg, x, pool, ctx):
     return x + h.astype(x.dtype), pool
 
 
+def block_mixed_paged(p, cfg: ModelConfig, blk: BlockCfg, x, pool, ctx):
+    """Fused mixed-batch pass over the shared paged pool (DESIGN.md §10).
+
+    x: (N, d) — one row per flat token of the iteration (chunk tokens and
+    decode tokens alike), routed through ctx["block_tables"] by
+    ctx["tok_seq"] / ctx["tok_pos"]. Returns (x, updated pool).
+    Attention-cache blocks only.
+    """
+    if blk.kind not in ("attn", "shared_attn"):
+        raise ValueError(f"paged execution serves attention blocks, "
+                         f"got {blk.kind}")
+    eps = cfg.norm_eps
+    h, pool = attention.attention_mixed_paged(
+        p["attn"], blk.attn, rms_norm(x, p["norm1"], eps), pool,
+        ctx["block_tables"], ctx["tok_seq"], ctx["tok_pos"],
+        window_override=ctx.get("window_override", "cfg"),
+        discard_pid=ctx.get("discard_pid"))
+    if blk.post_norms:
+        h = rms_norm(h, p["post_norm1"], eps)
+    x = x + h.astype(x.dtype)
+    xin = rms_norm(x, p["norm2"], eps)
+    if blk.ffn.kind == "moe":
+        h, _ = moe.moe_forward(p["moe"], blk.ffn, xin[:, None])
+        h = h[:, 0]
+    else:
+        h = mlp.mlp_forward(p["mlp"], blk.ffn, xin)
+    if blk.post_norms:
+        h = rms_norm(h, p["post_norm2"], eps)
+    return x + h.astype(x.dtype), pool
+
+
 def block_extend_paged(p, cfg: ModelConfig, blk: BlockCfg, x, pool, ctx):
     """Chunked-prefill pass writing pool pages in place. x: (B, T, d) at
     positions ctx["start"][b] + t; only the first ctx["n_new"][b] tokens

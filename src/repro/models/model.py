@@ -301,6 +301,69 @@ class LM:
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         return self.logits(params, x), tuple(new_pools)
 
+    def forward_mixed_paged(self, params, tokens, tok_seq, tok_pos, q_last,
+                            pools, block_tables, *, embeds=None,
+                            window_override="cfg", discard_pid=None):
+        """Fused mixed-batch iteration (DESIGN.md §10): every prefill
+        chunk's tokens and every decode's single token of one scheduler
+        iteration, flattened into a single ragged batch and executed in ONE
+        dispatch — one kv_append scatter per layer covering all new tokens,
+        one ragged paged-attention pass, and greedy sampling on device so
+        only int32 token ids need to cross the host boundary.
+
+        tokens: (N,) int32 flat new-token ids (or (N, K) audio; or None
+        with embeds (N, d)); tok_seq (N,) int32 names each token's
+        sequence (block-table row); tok_pos (N,) int32 its absolute
+        position (-1 marks a padded token row); q_last (B,) int32 is the
+        flat index of each sequence's last real token (0 for padded
+        sequence rows); pools / block_tables / discard_pid as in
+        decode_step_paged. Causality inside a chunk comes from the
+        per-token mask `kv pos <= tok_pos[i]` — all appends land before
+        attention reads, and later chunk tokens sit at higher positions.
+
+        Returns (sampled (B,) int32 greedy ids at each sequence's last
+        token, logits (B, V) / (B, K, V) — retrievable but not fetched by
+        the serving hot path — and the new pools).
+        """
+        cfg = self.cfg
+        if tokens is not None:
+            tok = tokens[:, None] if tokens.ndim == 1 else tokens[:, None, :]
+            x = self.embed(params, tok)[:, 0]
+        else:
+            x = embeds
+        ctx = {"block_tables": block_tables, "tok_seq": tok_seq,
+               "tok_pos": tok_pos, "window_override": window_override,
+               "discard_pid": discard_pid}
+        shared = params.get("shared")
+        new_pools = []
+
+        for gi, g in enumerate(cfg.groups):
+            period = g.period
+
+            def body(xx, inp, period=period):
+                per_params, pool_p = inp
+                new_p = {}
+                for j, blk in enumerate(period):
+                    pj = shared if blk.kind == "shared_attn" \
+                        else per_params[f"b{j}"]
+                    xx, pool_j = B.block_mixed_paged(pj, cfg, blk, xx,
+                                                     pool_p[f"b{j}"], ctx)
+                    new_p[f"b{j}"] = pool_j
+                return xx, new_p
+
+            x, pools_g = jax.lax.scan(
+                body, x, (params["groups"][gi]["scan"], pools[gi]))
+            new_pools.append(pools_g)
+
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        last = x[q_last]                                  # (B, d)
+        logits = self.logits(params, last)
+        # greedy sampling on device: argmax of the last codebook's row —
+        # exactly the engine's host-side np.argmax(...reshape(-1, V)[-1])
+        flat = logits.reshape(logits.shape[0], -1, cfg.vocab_size)[:, -1]
+        sampled = jnp.argmax(flat, axis=-1).astype(jnp.int32)
+        return sampled, logits, tuple(new_pools)
+
     def extend_step_paged(self, params, tokens, start, n_new, pools,
                           block_tables, *, embeds=None,
                           window_override="cfg", logits_index=None,

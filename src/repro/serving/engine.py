@@ -6,11 +6,21 @@ model with paged KV storage:
   * KV lives in global paged pools (one pytree mirroring the model's cache
     structure, page-indexed); a BlockManager allocates pages; per-request
     block tables map logical positions to pages.
-  * decode        — paged=True (default): one jitted bucketed-batch call
-                    over the shared pools (LM.decode_step_paged) — each new
-                    token is ONE page-slot write (kv_append) and attention
-                    reads the pool through the block tables. paged=False
-                    keeps the legacy gather path (materialize a contiguous
+  * fused         — fused=True (default, requires paged): each scheduler
+                    iteration's chunks AND decodes are flattened into ONE
+                    ragged token batch and executed by a single jitted
+                    LM.forward_mixed_paged dispatch — one kv_append scatter
+                    covering every new token, one ragged paged-attention
+                    pass, greedy argmax ON DEVICE so only B int32 ids cross
+                    the host boundary instead of B×vocab float logits
+                    (DESIGN.md §10). fused=False keeps the per-call paths
+                    below as the differential oracle, exactly as
+                    paged=False preserves the gather oracle.
+  * decode        — paged=True: one jitted bucketed-batch call over the
+                    shared pools (LM.decode_step_paged) — each new token is
+                    ONE page-slot write (kv_append) and attention reads the
+                    pool through the block tables. paged=False keeps the
+                    legacy gather path (materialize a contiguous
                     per-request cache view, decode, scatter back) as the
                     reference oracle: O(context) HBM traffic per token, the
                     scatter-cost pathology of §3.2 (DESIGN.md §9).
@@ -49,9 +59,8 @@ and trivially preserved; see DESIGN.md §4).
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
-import heapq
-from collections import deque
 from typing import Dict, List, Optional
 
 import jax
@@ -86,6 +95,7 @@ class Engine:
                  prefix_cache: bool = False,
                  cache_pages: Optional[int] = None,
                  paged: bool = True,
+                 fused: bool = True,
                  dtype=jnp.float32):
         for blk in cfg.blocks:
             assert blk.kind in ("attn", "shared_attn"), \
@@ -116,15 +126,27 @@ class Engine:
         self.kv: Dict[int, ReqKV] = {}
         self.now = 0.0
         self.finished: List[Request] = []
-        self._pending_arrivals = deque()
+        # kept sorted by DESCENDING arrival: the next request to admit is
+        # at the tail, so intake is one bisect + shift and admission is an
+        # O(1) pop() — no O(n^2) re-sort or front-pop under bursty loads
+        self._pending_arrivals: List[Request] = []
         self.paged = paged
+        self.fused = bool(fused and paged)   # the fused path runs on pools
         # KV bytes copied between buffers, split by phase (DESIGN.md §9):
         # gather-path decode/prefill round-trip the whole block-table view;
-        # the paged path appends exactly the new tokens' slots.
+        # the paged path appends exactly the new tokens' slots. The fused
+        # path additionally tracks dispatch density (DESIGN.md §10):
+        # device_dispatches counts jitted model calls, mixed_iterations the
+        # scheduler iterations that executed any chunk or decode (fused:
+        # exactly one dispatch each), logit_bytes what the sampling
+        # boundary actually moved device->host (fused: B int32 ids;
+        # unfused: the full B×vocab float logits).
         self.counters: Dict[str, int] = {
             "decode_bytes": 0, "decode_tokens": 0,
             "prefill_bytes": 0, "prefill_tokens": 0,
-            "swap_bytes": 0, "cow_bytes": 0}
+            "swap_bytes": 0, "cow_bytes": 0,
+            "device_dispatches": 0, "mixed_iterations": 0,
+            "logit_bytes": 0}
         # bytes one token position occupies across every layer's pool
         self.kv_token_bytes = int(sum(
             leaf.dtype.itemsize * leaf.shape[0]
@@ -160,6 +182,13 @@ class Engine:
                 p, t, s, nn, pools, bt, logits_index=li,
                 discard_pid=self.scratch_page),
             donate_argnums=(4,) if donate else ())
+        # the whole mixed iteration — every chunk, every decode, and greedy
+        # sampling — in one dispatch (DESIGN.md §10)
+        self._mixed_jit = jax.jit(
+            lambda p, t, ts, tp, ql, pools, bt: self.model.forward_mixed_paged(
+                p, t, ts, tp, ql, pools, bt,
+                discard_pid=self.scratch_page),
+            donate_argnums=(5,) if donate else ())
 
     @staticmethod
     def _bucket(n: int) -> int:
@@ -172,14 +201,17 @@ class Engine:
     # request intake
     # ------------------------------------------------------------------
     def add_request(self, req: Request):
-        self._pending_arrivals.append(req)
-        self._pending_arrivals = deque(
-            sorted(self._pending_arrivals, key=lambda r: r.arrival))
+        # O(log n) search + O(n) shift instead of re-sorting the whole
+        # queue on every insert; the list is descending by arrival, so
+        # insort_left on the negated key keeps FIFO order among equal
+        # arrival times once _admit pops from the tail
+        bisect.insort_left(self._pending_arrivals, req,
+                           key=lambda r: -r.arrival)
 
     def _admit(self):
         while self._pending_arrivals and \
-                self._pending_arrivals[0].arrival <= self.now:
-            req = self._pending_arrivals.popleft()
+                self._pending_arrivals[-1].arrival <= self.now:
+            req = self._pending_arrivals.pop()
             if req.prompt_tokens is not None:
                 toks = [int(t) % self.cfg.vocab_size
                         for t in req.prompt_tokens]
@@ -201,12 +233,16 @@ class Engine:
         return got
 
     def _ensure_pages(self, st: ReqKV, upto_tokens: int):
-        need = -(-upto_tokens // self.page)
-        while len(st.pages) < need:
-            got = self._allocate_pages(1)
-            if got is None:
-                raise RuntimeError("out of KV pages — size the engine up")
-            st.pages.append(("dev", got[0]))
+        # request the whole shortfall in one _allocate_pages call: a single
+        # cache-eviction pass covers the lot, instead of one page (and
+        # potentially one eviction scan) per loop trip
+        short = -(-upto_tokens // self.page) - len(st.pages)
+        if short <= 0:
+            return
+        got = self._allocate_pages(short)
+        if got is None:
+            raise RuntimeError("out of KV pages — size the engine up")
+        st.pages.extend(("dev", pid) for pid in got)
 
     def _ensure_writable(self, st: ReqKV, pos: int):
         """Copy-on-write: the page holding token position ``pos`` is about
@@ -492,7 +528,11 @@ class Engine:
                 self.params, chunk_ids, jnp.asarray([start], jnp.int32),
                 jnp.asarray([n], jnp.int32), self.pools,
                 jnp.asarray(bt, jnp.int32), jnp.asarray([n - 1], jnp.int32))
-            self.counters["prefill_bytes"] += n * self.kv_token_bytes
+            # one latent-table gather per batch row (of one) for MLA
+            # blocks — mla_extend_paged materializes the view once per
+            # call, unlike the fused path's per-token row views
+            self.counters["prefill_bytes"] += n * self.kv_token_bytes \
+                + self.max_pages * self.page * self.kv_mla_token_bytes
         else:
             cache = self._gather_cache(bt)
             logits, cache = self._extend_jit(
@@ -503,11 +543,14 @@ class Engine:
             self.counters["prefill_bytes"] += \
                 (self.max_pages * self.page + n) * self.kv_token_bytes
         self.counters["prefill_tokens"] += n
+        self.counters["device_dispatches"] += 1
         st.computed = start + n
         # final chunk of a fresh prefill emits the first generated token
         if st.computed == req.target_ctx and len(st.tokens) == req.target_ctx:
-            st.tokens.append(int(jnp.argmax(
-                np.asarray(logits[0]).reshape(-1, self.cfg.vocab_size)[-1])))
+            row = np.asarray(jax.device_get(logits[0]))
+            self.counters["logit_bytes"] += row.nbytes
+            st.tokens.append(int(np.argmax(
+                row.reshape(-1, self.cfg.vocab_size)[-1])))
         if st.computed == req.target_ctx:
             # prefill/recompute complete: publish the context so concurrent
             # same-prefix requests can hit before this one even finishes
@@ -556,9 +599,109 @@ class Engine:
                 (B_pad * self.max_pages * self.page + B) \
                 * self.kv_token_bytes
         self.counters["decode_tokens"] += B
-        self._decode_logits = np.asarray(jax.device_get(logits))[:B]
+        self.counters["device_dispatches"] += 1
+        # the full B_pad x vocab logits cross the host boundary here —
+        # the per-step sync the fused path's on-device sampling removes
+        arr = np.asarray(jax.device_get(logits))
+        self.counters["logit_bytes"] += arr.nbytes
+        self._decode_ids = [
+            int(np.argmax(row.reshape(-1, self.cfg.vocab_size)[-1]))
+            for row in arr[:B]]
         for st, p in zip(sts, pos[:B]):
             st.computed = int(p) + 1
+
+    def _exec_mixed(self, plan):
+        """Fused mixed-batch iteration (DESIGN.md §10): flatten every chunk
+        and every decode of this plan into one ragged token batch —
+        flattened ids + per-token (sequence, position) routing + a stacked
+        block-table matrix, bucketed for stable jit shapes — and execute it
+        with a single LM.forward_mixed_paged dispatch. Greedy sampling runs
+        on device, so the only device->host transfer is B int32 ids; full
+        logits stay resident (retrievable, never fetched here)."""
+        entries = []                       # (req, st, start, n, is_chunk)
+        for req, n in plan.chunks:
+            st = self.kv[req.rid]
+            assert req.host_tokens == 0, \
+                "chunks require device-resident prefix"
+            start = st.computed
+            self._ensure_pages(st, start + n)
+            # only the first page of the chunk range can be shared (a
+            # matched COW tail); pages past it were freshly allocated
+            self._ensure_writable(st, start)
+            entries.append((req, st, start, n, True))
+        for req in plan.decode:
+            st = self.kv[req.rid]
+            self._ensure_pages(st, req.target_ctx + 1)
+            self._ensure_writable(st, req.target_ctx)
+            entries.append((req, st, req.target_ctx, 1, False))
+        if not entries:
+            return
+
+        B = len(entries)
+        B_pad = self._bucket(B)
+        total = sum(n for _, _, _, n, _ in entries)
+        N_pad = self._bucket(total)
+        bt = np.full((B_pad, self.max_pages), self.scratch_page, np.int64)
+        toks = np.zeros(N_pad, np.int64)
+        tseq = np.zeros(N_pad, np.int64)      # pad rows: masked via tok_pos
+        tpos = np.full(N_pad, -1, np.int64)   # -1 marks a padded token row
+        qlast = np.zeros(B_pad, np.int64)
+        off = 0
+        for b, (req, st, start, n, _) in enumerate(entries):
+            ids = self._device_page_ids(st, len(st.pages))
+            bt[b, :len(ids)] = ids
+            toks[off:off + n] = st.tokens[start:start + n]
+            tseq[off:off + n] = b
+            tpos[off:off + n] = np.arange(start, start + n)
+            qlast[b] = off + n - 1
+            off += n
+
+        toks_j = jnp.asarray(toks, jnp.int32)
+        if self.cfg.n_codebooks:
+            toks_j = jnp.broadcast_to(toks_j[:, None],
+                                      (N_pad, self.cfg.n_codebooks))
+        sampled, _logits, self.pools = self._mixed_jit(
+            self.params, toks_j, jnp.asarray(tseq, jnp.int32),
+            jnp.asarray(tpos, jnp.int32), jnp.asarray(qlast, jnp.int32),
+            self.pools, jnp.asarray(bt, jnp.int32))
+        ids = np.asarray(jax.device_get(sampled))
+
+        n_chunk = sum(n for _, _, _, n, c in entries if c)
+        n_dec = B - len(plan.chunks)
+        # MLA latents have no ragged kernel: the mixed dispatch gathers
+        # the whole latent table once per flat row — chunk, decode, and
+        # bucket-padding rows alike (zero for GQA-only models). Chunk
+        # rows charge prefill, decode rows charge decode, and padding
+        # follows the decode bucket when one exists (the unfused decode
+        # counts its padded batch the same way), else prefill.
+        mla_gather = self.max_pages * self.page * self.kv_mla_token_bytes
+        pad_rows = N_pad - total
+        self.counters["prefill_bytes"] += n_chunk * self.kv_token_bytes \
+            + (n_chunk + (0 if n_dec else pad_rows)) * mla_gather
+        self.counters["prefill_tokens"] += n_chunk
+        # O(1) appends per generated token otherwise
+        self.counters["decode_bytes"] += n_dec * self.kv_token_bytes \
+            + (n_dec + (pad_rows if n_dec else 0)) * mla_gather
+        self.counters["decode_tokens"] += n_dec
+        self.counters["device_dispatches"] += 1
+        self.counters["logit_bytes"] += ids.nbytes  # B_pad int32 ids, O(B)
+
+        self._decode_ids = []
+        for b, (req, st, start, n, is_chunk) in enumerate(entries):
+            if is_chunk:
+                st.computed = start + n
+                # final chunk of a fresh prefill seeds generation with the
+                # on-device sampled id
+                if st.computed == req.target_ctx \
+                        and len(st.tokens) == req.target_ctx:
+                    st.tokens.append(int(ids[b]))
+                if st.computed == req.target_ctx:
+                    # prefill/recompute complete: publish the context so
+                    # concurrent same-prefix requests can hit early
+                    self._register_in_cache(st)
+            else:
+                st.computed = start + 1
+                self._decode_ids.append(int(ids[b]))
 
     # ------------------------------------------------------------------
     # main loop
@@ -581,7 +724,7 @@ class Engine:
         if plan.empty:
             nxts = []
             if self._pending_arrivals:
-                nxts.append(self._pending_arrivals[0].arrival)
+                nxts.append(self._pending_arrivals[-1].arrival)
             t = self.api.next_completion_time()
             if t is not None:
                 nxts.append(t)
@@ -595,9 +738,14 @@ class Engine:
             self._exec_swap_out(req)
         for req, _ in plan.swap_in:
             self._exec_swap_in(req)
-        for req, n in plan.chunks:
-            self._exec_chunk(req, n)
-        self._exec_decode(plan.decode)
+        if plan.chunks or plan.decode:
+            self.counters["mixed_iterations"] += 1
+        if self.fused:
+            self._exec_mixed(plan)
+        else:
+            for req, n in plan.chunks:
+                self._exec_chunk(req, n)
+            self._exec_decode(plan.decode)
 
         iter_time = self.cost.t_fwd(max(1, plan.query_tokens),
                                     plan.context_tokens) + plan.stall_s
@@ -609,9 +757,7 @@ class Engine:
         for b, req in enumerate(decode_reqs):
             if req.rid in intercepted or req.rid in finished:
                 continue
-            self.kv[req.rid].tokens.append(
-                int(np.argmax(self._decode_logits[b].reshape(
-                    -1, self.cfg.vocab_size)[-1])))
+            self.kv[req.rid].tokens.append(self._decode_ids[b])
         for req, intc in events["intercepted"]:
             self.sched.notify_intercepted(req, intc, end)
             self.api.launch(req, intc, end)

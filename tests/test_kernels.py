@@ -9,6 +9,7 @@ from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.kv_append import kv_append
 from repro.kernels.paged_attention import paged_attention
+from repro.kernels.ragged_paged_attention import ragged_paged_attention
 from repro.kernels.swap_pack import swap_pack, swap_unpack
 
 try:
@@ -133,6 +134,98 @@ def test_paged_attention_sliding_window(window):
                           interpret=True)
     want = ref.paged_attention_ref(q, kp, vp, bt, lens, window=window)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# ragged-query paged attention (the fused mixed-batch core, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("N,Hkv,G,hd,page,max_pages,n_pages,B", [
+    (1, 2, 4, 64, 16, 8, 32, 1),     # a single decode token
+    (9, 2, 4, 64, 16, 8, 32, 3),     # mixed ragged batch
+    (6, 1, 8, 128, 8, 16, 64, 2),
+    (5, 4, 1, 32, 32, 4, 16, 5),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ragged_paged_attention(N, Hkv, G, hd, page, max_pages, n_pages, B,
+                                dtype):
+    rng = np.random.default_rng(N * 13 + page)
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (N, Hkv, G, hd)).astype(dtype)
+    kp = jax.random.normal(ks[1], (n_pages, page, Hkv, hd)).astype(dtype)
+    vp = jax.random.normal(ks[2], (n_pages, page, Hkv, hd)).astype(dtype)
+    bt = jnp.asarray(rng.integers(0, n_pages, (B, max_pages)), jnp.int32)
+    tok_seq = jnp.asarray(rng.integers(0, B, (N,)), jnp.int32)
+    tok_pos = jnp.asarray(rng.integers(0, page * max_pages, (N,)), jnp.int32)
+    out = ragged_paged_attention(q, kp, vp, bt, tok_seq, tok_pos,
+                                 interpret=True)
+    want = ref.ragged_paged_attention_ref(q, kp, vp, bt, tok_seq, tok_pos)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("window,softcap", [(7, None), (16, None),
+                                            (None, 30.0), (9, 25.0)])
+def test_ragged_paged_attention_window_softcap(window, softcap):
+    rng = np.random.default_rng(0 if window is None else window)
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (6, 2, 2, 32))
+    kp = jax.random.normal(ks[1], (16, 8, 2, 32))
+    vp = jax.random.normal(ks[2], (16, 8, 2, 32))
+    bt = jnp.asarray(rng.integers(0, 16, (2, 4)), jnp.int32)
+    tok_seq = jnp.asarray([0, 0, 0, 1, 1, 0], jnp.int32)
+    tok_pos = jnp.asarray([0, 12, 31, 7, 8, 29], jnp.int32)
+    out = ragged_paged_attention(q, kp, vp, bt, tok_seq, tok_pos,
+                                 window=window, softcap=softcap,
+                                 interpret=True)
+    want = ref.ragged_paged_attention_ref(q, kp, vp, bt, tok_seq, tok_pos,
+                                          window=window, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+def test_ragged_degenerates_to_paged_attention():
+    """One token per sequence at position ctx_lens-1 IS the decode kernel:
+    both kernels must agree (cross-oracle, padded rows excluded)."""
+    rng = np.random.default_rng(3)
+    B, Hkv, G, hd, page, max_pages, n_pages = 4, 2, 2, 32, 8, 6, 24
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Hkv, G, hd))
+    kp = jax.random.normal(ks[1], (n_pages, page, Hkv, hd))
+    vp = jax.random.normal(ks[2], (n_pages, page, Hkv, hd))
+    bt = jnp.asarray(rng.integers(0, n_pages, (B, max_pages)), jnp.int32)
+    lens = jnp.asarray([page * max_pages, 17, 1, 0], jnp.int32)  # 0 = pad
+    got = ragged_paged_attention(q, kp, vp, bt,
+                                 jnp.arange(B, dtype=jnp.int32),
+                                 lens - 1, interpret=True)
+    want = paged_attention(q, kp, vp, bt, lens, interpret=True)
+    np.testing.assert_allclose(np.asarray(got)[:3], np.asarray(want)[:3],
+                               atol=2e-5)
+
+
+def test_ragged_chunk_internal_causality():
+    """Tokens of one chunk attend to earlier chunk tokens but never later
+    ones: perturbing the K/V slot of position p must change only queries
+    at positions >= p."""
+    rng = np.random.default_rng(1)
+    Hkv, G, hd, page, max_pages, n_pages = 2, 2, 32, 8, 4, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (4, Hkv, G, hd))
+    kp = jax.random.normal(ks[1], (n_pages, page, Hkv, hd))
+    vp = jax.random.normal(ks[2], (n_pages, page, Hkv, hd))
+    bt = jnp.asarray(rng.integers(0, n_pages, (1, max_pages)), jnp.int32)
+    tok_seq = jnp.zeros(4, jnp.int32)
+    tok_pos = jnp.asarray([4, 5, 6, 7], jnp.int32)       # one chunk
+    base = ragged_paged_attention(q, kp, vp, bt, tok_seq, tok_pos,
+                                  interpret=True)
+    # clobber position 6's slot (page bt[0, 0], offset 6)
+    kp2 = kp.at[bt[0, 0], 6].add(3.0)
+    vp2 = vp.at[bt[0, 0], 6].add(-2.0)
+    pert = ragged_paged_attention(q, kp2, vp2, bt, tok_seq, tok_pos,
+                                  interpret=True)
+    d = np.max(np.abs(np.asarray(pert) - np.asarray(base)),
+               axis=(1, 2, 3))
+    assert np.all(d[:2] == 0.0), "earlier chunk tokens saw a later slot"
+    assert np.all(d[2:] > 0.0), "later chunk tokens missed an earlier slot"
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

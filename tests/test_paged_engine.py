@@ -1,11 +1,17 @@
-"""Differential harness for the in-place paged execution path (DESIGN.md §9).
+"""Differential harness for the paged and fused execution paths
+(DESIGN.md §9 / §10).
 
-The gather/scatter path (``paged=False``) materializes a contiguous cache
-view per decode step / prefill chunk and is kept as the reference oracle.
-The paged path — kv_append page writes + block-table attention over the
-shared pools — must produce bit-identical greedy token streams across every
-scheduling policy, with the prefix cache on and off, on the agent workload,
-while moving O(1) KV bytes per generated token instead of O(context).
+Two oracle layers, mirroring how the engine grew:
+
+  * gather oracle (``paged=False``) — materializes a contiguous cache view
+    per decode step / prefill chunk; the in-place paged path must emit its
+    exact greedy token streams (§9).
+  * unfused oracle (``paged=True, fused=False``) — one jitted call per
+    chunk plus one per decode batch; the fused mixed-batch path (one
+    dispatch per iteration, on-device sampling) must emit ITS exact
+    streams too (§10), across every scheduling policy with the prefix
+    cache on and off, while reporting exactly one device dispatch per
+    non-empty iteration and an O(B)-ids logit transfer.
 """
 import copy
 
@@ -33,14 +39,14 @@ def _agent_workload(cfg, n_sessions=2):
         final_gen=(8, 3), ret_tokens=(6, 2), max_tool_calls=2, max_ctx=240)
 
 
-def _run(cfg, reqs, policy, *, paged, prefix_cache=False):
+def _run(cfg, reqs, policy, *, paged, fused=True, prefix_cache=False):
     eng = Engine(cfg, POLICIES[policy], page_size=16, n_pages=128,
-                 max_model_len=256, seed=0, paged=paged,
+                 max_model_len=256, seed=0, paged=paged, fused=fused,
                  prefix_cache=prefix_cache)
     for r in copy.deepcopy(reqs):
         eng.add_request(r)
     fin = eng.run()
-    assert len(fin) == len(reqs), (policy, paged, prefix_cache)
+    assert len(fin) == len(reqs), (policy, paged, fused, prefix_cache)
     return {r.rid: eng.generated_text(r) for r in fin}, eng
 
 
@@ -48,62 +54,199 @@ def _run(cfg, reqs, policy, *, paged, prefix_cache=False):
 def diff():
     cfg = get_config("llama3.2-1b", tiny=True)
     reqs = _agent_workload(cfg)
-    oracle = _run(cfg, reqs, "vllm", paged=False)
-    paged = {}
+    oracle = _run(cfg, reqs, "vllm", paged=False, fused=False)
+    fused, unfused = {}, {}
     for name in ALL_POLICIES:
         for cache_on in (False, True):
-            paged[(name, cache_on)] = _run(cfg, reqs, name, paged=True,
+            fused[(name, cache_on)] = _run(cfg, reqs, name, paged=True,
+                                           fused=True,
                                            prefix_cache=cache_on)
-    return cfg, oracle, paged
+            unfused[(name, cache_on)] = _run(cfg, reqs, name, paged=True,
+                                             fused=False,
+                                             prefix_cache=cache_on)
+    return cfg, oracle, fused, unfused
 
 
 def test_paged_streams_match_gather_oracle(diff):
     """The headline differential property: every paged run — any policy,
-    cache on or off — emits the gather oracle's exact token streams."""
-    _, (oracle_streams, _), paged = diff
-    for key, (streams, _) in paged.items():
+    cache on or off, fused or not — emits the gather oracle's exact token
+    streams."""
+    _, (oracle_streams, _), fused, unfused = diff
+    for key, (streams, _) in fused.items():
         assert streams == oracle_streams, \
-            f"paged {key} diverged from the gather oracle"
+            f"fused {key} diverged from the gather oracle"
+    for key, (streams, _) in unfused.items():
+        assert streams == oracle_streams, \
+            f"unfused {key} diverged from the gather oracle"
+
+
+def test_fused_streams_match_unfused(diff):
+    """§10's differential pin: the fused mixed-batch path reproduces the
+    unfused per-call path's greedy streams bit-for-bit on every policy,
+    prefix cache on and off."""
+    _, _, fused, unfused = diff
+    for key in fused:
+        assert fused[key][0] == unfused[key][0], \
+            f"fused {key} diverged from the unfused oracle"
+
+
+def test_fused_single_dispatch_per_iteration(diff):
+    """Every non-empty iteration of a fused run is exactly ONE jitted
+    model call; unfused runs pay one per chunk plus one per decode batch
+    (>= fused, strictly more whenever an iteration mixes work)."""
+    _, _, fused, unfused = diff
+    for key, (_, eng) in fused.items():
+        assert eng.counters["mixed_iterations"] > 0
+        assert eng.counters["device_dispatches"] == \
+            eng.counters["mixed_iterations"], key
+    for key, (_, eng) in unfused.items():
+        assert eng.counters["device_dispatches"] >= \
+            eng.counters["mixed_iterations"], key
+
+
+def test_fused_transfers_ids_not_logits(diff):
+    """On-device sampling boundary: a fused run moves at most
+    bucket(B) * 4 bytes of sampled int32 ids per iteration device->host;
+    the unfused oracle fetches the full B x vocab float32 logits every
+    decode step."""
+    cfg, _, fused, unfused = diff
+    for key, (_, eng) in fused.items():
+        b_pad = Engine._bucket(len(eng.finished))      # max batch bound
+        assert eng.counters["logit_bytes"] <= \
+            4 * b_pad * eng.counters["mixed_iterations"], key
+    for key, (_, eng) in unfused.items():
+        assert eng.counters["logit_bytes"] >= \
+            eng.counters["decode_tokens"] * cfg.vocab_size * 4, key
+        ratio = (eng.counters["logit_bytes"]
+                 / max(1, fused[key][1].counters["logit_bytes"]))
+        assert ratio >= cfg.vocab_size / 2, \
+            f"fused logit transfer only {ratio:.0f}x smaller for {key}"
 
 
 def test_paged_mechanisms_actually_exercised(diff):
     """The equality above must not be vacuous: recompute, swap, and cache
     hits all really happened on the paged path."""
-    _, _, paged = diff
-    assert paged[("vllm", False)][1].sched.stats.recompute_tokens > 0
-    swap_eng = paged[("swap", False)][1]
+    _, _, fused, _ = diff
+    assert fused[("vllm", False)][1].sched.stats.recompute_tokens > 0
+    swap_eng = fused[("swap", False)][1]
     assert swap_eng.sched.stats.swapped_out_tokens > 0
     assert (swap_eng.sched.stats.swapped_in_tokens
             == swap_eng.sched.stats.swapped_out_tokens)
-    assert paged[("vllm", True)][1].sched.stats.cache_hit_tokens > 0
+    assert fused[("vllm", True)][1].sched.stats.cache_hit_tokens > 0
 
 
 def test_no_page_leaks_on_paged_path(diff):
-    _, _, paged = diff
-    for key, (_, eng) in paged.items():
-        held = eng.cache.n_pages if eng.cache is not None else 0
-        assert eng.blocks.num_free == eng.blocks.n_pages - 1 - held, key
+    _, _, fused, unfused = diff
+    for runs in (fused, unfused):
+        for key, (_, eng) in runs.items():
+            held = eng.cache.n_pages if eng.cache is not None else 0
+            assert eng.blocks.num_free == \
+                eng.blocks.n_pages - 1 - held, key
 
 
 def test_paged_decode_moves_o1_bytes_per_token(diff):
-    """The measurable form of the tentpole claim: the paged path writes
-    exactly one token's K/V per generated token; the gather oracle
+    """The measurable form of the §9 claim: the paged path (fused or not)
+    writes exactly one token's K/V per generated token; the gather oracle
     round-trips the whole block-table view (O(context))."""
-    _, (_, gather_eng), paged = diff
-    for key in [("vllm", False), ("infercept", True)]:
-        eng = paged[key][1]
-        assert eng.counters["decode_tokens"] > 0
-        assert eng.counters["decode_bytes"] == \
-            eng.counters["decode_tokens"] * eng.kv_token_bytes, key
-        assert eng.counters["prefill_bytes"] == \
-            eng.counters["prefill_tokens"] * eng.kv_token_bytes, key
+    _, (_, gather_eng), fused, unfused = diff
+    for runs in (fused, unfused):
+        for key in [("vllm", False), ("infercept", True)]:
+            eng = runs[key][1]
+            assert eng.counters["decode_tokens"] > 0
+            assert eng.counters["decode_bytes"] == \
+                eng.counters["decode_tokens"] * eng.kv_token_bytes, key
+            assert eng.counters["prefill_bytes"] == \
+                eng.counters["prefill_tokens"] * eng.kv_token_bytes, key
     # gather decode: >= one full table gather per token => O(context)
     table_tokens = gather_eng.max_pages * gather_eng.page
     assert gather_eng.kv_bytes_per_decode_token() >= \
         table_tokens * gather_eng.kv_token_bytes
     ratio = (gather_eng.kv_bytes_per_decode_token()
-             / paged[("vllm", False)][1].kv_bytes_per_decode_token())
+             / fused[("vllm", False)][1].kv_bytes_per_decode_token())
     assert ratio >= 10.0, f"paged decode only {ratio:.1f}x cheaper"
+
+
+# ---------------------------------------------------------------------------
+# fused dispatch density under genuinely mixed iterations
+# ---------------------------------------------------------------------------
+def test_fused_one_dispatch_on_concurrent_prefill_and_decode():
+    """A near-simultaneous burst forces iterations that carry prefill
+    chunks AND a decode batch at once. The unfused engine pays
+    1 + len(chunks) dispatches there; the fused engine must still report
+    exactly one per non-empty iteration, with identical streams and an
+    O(B)-ids logit transfer."""
+    cfg = get_config("llama3.2-1b", tiny=True)
+    reqs = make_agent_workload(
+        seed=7, n_sessions=4, rate_rps=500.0, vocab=cfg.vocab_size,
+        n_templates=2, system_prompt_len=50, turns=(2, 2), turn_gap_s=0.01,
+        hist_per_turn=12, prefix_share=0.75, gen_tokens=(10, 3),
+        final_gen=(10, 3), ret_tokens=(6, 2), max_tool_calls=2, max_ctx=240)
+
+    def burst(fused):
+        eng = Engine(cfg, POLICIES["vllm"], page_size=16, n_pages=256,
+                     max_model_len=256, seed=0, paged=True, fused=fused)
+        for r in copy.deepcopy(reqs):
+            eng.add_request(r)
+        fin = eng.run()
+        assert len(fin) == len(reqs)
+        return {r.rid: eng.generated_text(r) for r in fin}, eng
+
+    sf, ef = burst(True)
+    su, eu = burst(False)
+    assert sf == su
+    # the scenario is real: some unfused iteration ran chunk(s) + decode
+    assert eu.counters["device_dispatches"] > \
+        eu.counters["mixed_iterations"], "no mixed iteration occurred"
+    assert ef.counters["device_dispatches"] == \
+        ef.counters["mixed_iterations"]
+    assert ef.counters["logit_bytes"] <= \
+        4 * Engine._bucket(len(reqs)) * ef.counters["mixed_iterations"]
+    assert eu.counters["logit_bytes"] >= \
+        eu.counters["decode_tokens"] * cfg.vocab_size * 4
+
+
+# ---------------------------------------------------------------------------
+# engine intake / allocation satellites
+# ---------------------------------------------------------------------------
+def test_add_request_keeps_arrival_order_stable():
+    """Out-of-order submission must admit by arrival time, FIFO among
+    ties (the bisect.insort intake: descending list, tail pops first)."""
+    from repro.core.request import Request, Segment
+    cfg = get_config("llama3.2-1b", tiny=True)
+    eng = Engine(cfg, POLICIES["vllm"], page_size=16, n_pages=32,
+                 max_model_len=64)
+    arrivals = [3.0, 1.0, 2.0, 1.0, 0.5, 2.0]
+    for i, t in enumerate(arrivals):
+        eng.add_request(Request(
+            rid=i, arrival=t, prompt_len=4,
+            segments=[Segment(gen_tokens=1, interception=None)]))
+    admit_order = [(r.arrival, r.rid)
+                   for r in reversed(eng._pending_arrivals)]
+    assert admit_order == [(0.5, 4), (1.0, 1), (1.0, 3), (2.0, 2),
+                           (2.0, 5), (3.0, 0)]
+    eng.now = 10.0
+    eng._admit()
+    assert not eng._pending_arrivals and len(eng.kv) == len(arrivals)
+
+
+def test_ensure_pages_allocates_shortfall_in_one_call(monkeypatch):
+    """A multi-page shortfall triggers exactly ONE allocator round trip
+    (one potential eviction pass), not one per page."""
+    from repro.serving.engine import ReqKV
+    cfg = get_config("llama3.2-1b", tiny=True)
+    eng = Engine(cfg, POLICIES["vllm"], page_size=16, n_pages=32,
+                 max_model_len=256)
+    calls = []
+    orig = eng._allocate_pages
+    monkeypatch.setattr(eng, "_allocate_pages",
+                        lambda n: calls.append(n) or orig(n))
+    st = ReqKV(tokens=[], pages=[])
+    eng._ensure_pages(st, 5 * eng.page)
+    assert calls == [5] and len(st.pages) == 5
+    eng._ensure_pages(st, 5 * eng.page)            # no shortfall: no call
+    assert calls == [5]
+    eng._ensure_pages(st, 7 * eng.page - 1)
+    assert calls == [5, 2] and len(st.pages) == 7
 
 
 # ---------------------------------------------------------------------------
@@ -157,3 +300,35 @@ def test_gather_scatter_pad_rows_never_touch_pages():
         assert np.all(arr[:, ~target] == 3.25), \
             "pad scatter entry wrote a pool page (scratch included)"
         assert np.all(arr[:, target] == 9.0)
+
+
+def test_mixed_pad_rows_never_touch_pages():
+    """Fused mixed batch: padded token rows (tok_pos == -1, tok_seq
+    deliberately aliasing a live sequence) must write nothing — every pool
+    slot except the live chunk/decode targets keeps its sentinel, and the
+    sampled ids come from the right rows."""
+    cfg = get_config("llama3.2-1b", tiny=True)
+    m = LM(cfg)
+    params = m.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+    page, n_pages, max_pages = 8, 12, 4
+    pools = m.init_cache(n_pages, page, dtype=jnp.float32)
+    pools = jax.tree.map(lambda l: jnp.full_like(l, 7.5), pools)
+    bt = np.zeros((2, max_pages), np.int64)
+    bt[0, :2] = [3, 4]          # seq 0: chunk positions 5..7 -> pages 3, 4
+    bt[1, :1] = [7]             # seq 1: decode at position 1 -> page 7
+    # flat batch: 3 chunk tokens + 1 decode token + 4 pad rows that alias
+    # live sequences on purpose
+    tseq = jnp.asarray([0, 0, 0, 1, 0, 1, 0, 1], jnp.int32)
+    tpos = jnp.asarray([5, 6, 7, 1, -1, -1, -1, -1], jnp.int32)
+    toks = jnp.asarray([5, 6, 7, 8, 1, 1, 1, 1], jnp.int32)
+    qlast = jnp.asarray([2, 3], jnp.int32)
+    _, _, new_pools = m.forward_mixed_paged(
+        params, toks, tseq, tpos, qlast, pools,
+        jnp.asarray(bt, jnp.int32))
+    live = np.zeros((n_pages, page), bool)
+    live[3, 5:] = True          # positions 5..7 of seq 0 (all in page 3)
+    live[7, 1] = True           # position 1 of seq 1
+    for leaf in jax.tree.leaves(new_pools):
+        arr = np.asarray(leaf)              # (periods, n_pages, page, ...)
+        assert np.all(arr[:, ~live] == 7.5), "pad row wrote a pool page"
+        assert not np.any(arr[:, live] == 7.5), "live row write missing"
