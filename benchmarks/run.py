@@ -444,6 +444,81 @@ def bench_mixed_sweep(quick=False):
         json.dump(results, f, indent=2)
 
 
+def bench_serve_sweep(quick=False):
+    """End-to-end serving through the first-class session API (DESIGN.md
+    §11): a ScriptedClient replays the mixed Table-1 workload over the
+    real engine for each scheduling policy and reports the paper's
+    headline metrics — TTFT and normalized latency p50/p99 per policy —
+    plus stream-identity against the legacy closed-loop engine. Writes
+    benchmarks/serve_sweep.json."""
+    import json
+    import os
+    from repro.configs import get_config
+    from repro.core import POLICIES
+    from repro.launch.serve import scale_to_budget
+    from repro.serving.engine import Engine
+    from repro.serving.session import ScriptedClient
+    from repro.serving.workloads import make_workload
+
+    cfg = get_config("llama3.2-1b", tiny=True)
+    n = 6 if quick else 12
+    reqs = scale_to_budget(
+        make_workload(seed=9, n_requests=n, rate_rps=2.0, max_ctx=220),
+        256, prompt_cap=48, gen_cap=12, ret_cap=8, max_segments=3)
+
+    def pcts(vals):
+        return (round(float(np.percentile(vals, 50)), 5),
+                round(float(np.percentile(vals, 99)), 5))
+
+    results = []
+    policies = ["vllm", "preserve", "swap", "infercept"]
+    legacy_streams = None
+    for name in policies:
+        # legacy closed loop: the stream-identity oracle (one policy is
+        # enough — §6 pins cross-policy identity — but compare each)
+        eng = Engine(cfg, POLICIES[name], page_size=16, n_pages=128,
+                     max_model_len=256, seed=0)
+        for r in copy.deepcopy(reqs):
+            eng.add_request(r)
+        fin = eng.run()
+        assert fin.drained and len(fin) == len(reqs), f"legacy {name}"
+        legacy_streams = {r.rid: eng.generated_text(r) for r in fin}
+
+        eng2 = Engine(cfg, POLICIES[name], page_size=16, n_pages=128,
+                      max_model_len=256, seed=0)
+        sc = ScriptedClient(eng2)
+        t0 = time.time()
+        streams = sc.replay(copy.deepcopy(reqs))
+        wall = time.time() - t0
+        fin2 = eng2.finished
+        assert len(fin2) == len(reqs), f"session {name} incomplete"
+        metrics = [r.latency_metrics() for r in fin2]
+        ttft_p50, ttft_p99 = pcts([m["ttft"] for m in metrics])
+        nl_p50, nl_p99 = pcts([m["normalized"] for m in metrics])
+        row = {
+            "policy": name,
+            "n_requests": len(reqs),
+            "ttft_p50_s": ttft_p50,
+            "ttft_p99_s": ttft_p99,
+            "norm_lat_p50_s_per_tok": nl_p50,
+            "norm_lat_p99_s_per_tok": nl_p99,
+            "virtual_time_s": round(eng2.now, 3),
+            "decode_tokens": eng2.counters["decode_tokens"],
+            "streams_match_legacy": streams == legacy_streams,
+            "wall_s": round(wall, 3),
+        }
+        results.append(row)
+        _row(f"serve_sweep_{name}", wall * 1e6,
+             {k: v for k, v in row.items()
+              if k not in ("policy", "wall_s")})
+        assert row["streams_match_legacy"], \
+            f"session API diverged from the legacy engine under {name}"
+    out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "serve_sweep.json")
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2)
+
+
 def bench_multi_gpu_scaling(quick=False):
     """13B on 1 vs 2 GPUs, 70B on 4 (paper §5.1: distributed setting gains
     grow because more HBM per GPU is left for KV)."""
@@ -471,7 +546,7 @@ def bench_multi_gpu_scaling(quick=False):
 ALL = [bench_table1_workload, bench_fig2_end2end, bench_fig3_breakdown,
        bench_waste_s32, bench_estimator, bench_single_augment,
        bench_kernels, bench_multi_gpu_scaling, bench_prefix_cache_sweep,
-       bench_decode_sweep, bench_mixed_sweep]
+       bench_decode_sweep, bench_mixed_sweep, bench_serve_sweep]
 
 
 def main() -> None:
@@ -484,11 +559,17 @@ def main() -> None:
     ap.add_argument("--mixed-sweep", action="store_true",
                     help="run only the fused-vs-unfused mixed-batch sweep "
                          "(alias for --only mixed_sweep)")
+    ap.add_argument("--serve-sweep", action="store_true",
+                    help="run only the session-API per-policy TTFT / "
+                         "normalized-latency sweep "
+                         "(alias for --only serve_sweep)")
     args = ap.parse_args()
     if args.decode_sweep:
         args.only = "decode_sweep"
     if args.mixed_sweep:
         args.only = "mixed_sweep"
+    if args.serve_sweep:
+        args.only = "serve_sweep"
     print("name,us_per_call,derived")
     for fn in ALL:
         if args.only and args.only not in fn.__name__:

@@ -1,16 +1,28 @@
 """Request state machine for augmented-LLM serving.
 
-A request's lifetime is a script of segments: generate n tokens, then hit an
-interception (tool call / human turn / model call), whose completion appends
-returned tokens to the context, then generate again, ... until done. This
-mirrors the paper's workload model (§2.2): per-request number of
+A request's lifetime is a sequence of segments: generate n tokens, then hit
+an interception (tool call / human turn / model call), whose completion
+appends returned tokens to the context, then generate again, ... until done.
+This mirrors the paper's workload model (§2.2): per-request number of
 interceptions, interception durations, and context lengths.
+
+Two construction paths feed the same machinery (DESIGN.md §11):
+
+  * scripted — the legacy closed loop: every segment's length and
+    interception are fixed up front (``Request(segments=[...])``), and the
+    scheduler fires interceptions by generated-token count.
+  * dynamic  — the session API: the request starts with ONE open-ended
+    segment (``gen_tokens=None``) and a ``controller`` that is consulted at
+    every sampled-token boundary; interceptions are requested by the caller
+    (explicit, stop-token, or detector) and ``close_segment`` fixes the
+    segment's length at the tokens actually generated. Scripted segments
+    are thereby just a pre-materialized special case.
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import List, Optional
+from typing import Any, List, Optional
 
 
 class Phase(enum.Enum):
@@ -23,15 +35,52 @@ class Phase(enum.Enum):
 
 @dataclasses.dataclass
 class Interception:
-    kind: str                  # math | qa | ve | chatbot | image | tts
-    duration: float            # oracle duration (sim ground truth)
+    kind: str                  # math | qa | ve | chatbot | image | tts | tool
+    duration: float            # oracle duration (sim ground truth / hint)
     returned_tokens: int       # tokens appended to the context on completion
 
 
 @dataclasses.dataclass
 class Segment:
-    gen_tokens: int
+    # None = open-ended (dynamic session segment, length fixed at the
+    # caller's intercept/finish via close_segment)
+    gen_tokens: Optional[int]
     interception: Optional[Interception]   # None for the final segment
+
+    @property
+    def open(self) -> bool:
+        return self.gen_tokens is None
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling configuration, applied ON DEVICE by the fused
+    path (models.model.sample_tokens). temperature <= 0 means greedy argmax
+    (the legacy behavior and the differential oracle); top_k <= 0 means the
+    full vocabulary. Sampling noise is keyed only by (seed, position), so a
+    request's stream is independent of batch composition and scheduling
+    policy — the §6 equivalence property survives stochastic sampling."""
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+@dataclasses.dataclass
+class InterceptDirective:
+    """A controller's request to intercept at the current token boundary.
+
+    ``returned_tokens`` is set only by scripted controllers (the engine's
+    virtual-time stub then completes the call with that many deterministic
+    ids); None means the caller owns the resume and will provide the actual
+    returned ids out of band (Engine.resume_request)."""
+    kind: str = "tool"
+    duration_hint: float = 0.0
+    returned_tokens: Optional[int] = None
+    reason: str = "explicit"   # explicit | stop_token | detector | scripted
 
 
 @dataclasses.dataclass
@@ -40,10 +89,17 @@ class Request:
     arrival: float
     prompt_len: int
     segments: List[Segment]
-    # Explicit prompt token ids (shared-prefix / agent workloads). None =
-    # synthesize unique-per-rid ids (engine) or an anonymous stream (sim),
-    # which makes cross-request prefix sharing impossible by construction.
+    # Explicit prompt token ids (shared-prefix / agent workloads, sessions).
+    # None = synthesize unique-per-rid ids (engine) or an anonymous stream
+    # (sim), which makes cross-request prefix sharing impossible by
+    # construction.
     prompt_tokens: Optional[List[int]] = None
+    # Per-request sampling parameters; None = greedy (legacy oracle).
+    sampling: Optional[SamplingParams] = None
+    # Session controller (duck-typed: on_token(req, token_id, now) ->
+    # None | "finish" | InterceptDirective), consulted by the engine at
+    # every sampled-token boundary. None = scripted closed-loop request.
+    controller: Optional[Any] = None
 
     # --- dynamic token accounting -----------------------------------------
     seg_idx: int = 0
@@ -73,6 +129,17 @@ class Request:
             assert len(self.prompt_tokens) == self.prompt_len, \
                 "prompt_tokens length must equal prompt_len"
 
+    @classmethod
+    def dynamic(cls, rid: int, arrival: float, prompt_tokens: List[int], *,
+                sampling: Optional[SamplingParams] = None,
+                controller: Optional[Any] = None) -> "Request":
+        """A session-driven request: one open segment, grown as the caller
+        drives the intercept/resume lifecycle."""
+        return cls(rid=rid, arrival=arrival, prompt_len=len(prompt_tokens),
+                   segments=[Segment(gen_tokens=None, interception=None)],
+                   prompt_tokens=list(prompt_tokens), sampling=sampling,
+                   controller=controller)
+
     # ------------------------------------------------------------------
     @property
     def to_compute(self) -> int:
@@ -85,14 +152,16 @@ class Request:
 
     @property
     def total_output(self) -> int:
-        return sum(s.gen_tokens for s in self.segments)
+        return sum(s.gen_tokens or 0 for s in self.segments)
 
     def current_segment(self) -> Segment:
         return self.segments[self.seg_idx]
 
     # ------------------------------------------------------------------
     def advance_decode(self, now: float) -> Optional[Interception]:
-        """Account one decoded token; returns the interception hit, if any."""
+        """Account one decoded token; returns the interception hit, if any.
+        Open (session) segments never fire here — their boundaries come
+        from the controller via close_segment."""
         assert self.phase == Phase.RUNNING and self.context_ready
         self.target_ctx += 1
         self.device_tokens += 1
@@ -101,9 +170,21 @@ class Request:
         if self.first_token_time is None:
             self.first_token_time = now
         seg = self.current_segment()
-        if self.gen_in_seg >= seg.gen_tokens:
+        if not seg.open and self.gen_in_seg >= seg.gen_tokens:
             return seg.interception     # may be None (request finished)
         return None
+
+    def close_segment(self, interception: Optional[Interception]):
+        """Dynamic sessions only: fix the open segment's length at the
+        tokens actually generated and attach the interception that ended it
+        (None = the session is finishing). Behind an interception a fresh
+        open segment is appended so decoding can continue after resume."""
+        seg = self.current_segment()
+        assert seg.open, "close_segment on a scripted segment"
+        seg.gen_tokens = self.gen_in_seg
+        seg.interception = interception
+        if interception is not None:
+            self.segments.append(Segment(gen_tokens=None, interception=None))
 
     def segment_done(self, now: float):
         """Advance past the completed segment (interception or finish)."""
@@ -115,10 +196,14 @@ class Request:
         self.seg_idx += 1
         self.gen_in_seg = 0
 
-    def resume(self, now: float):
-        """Interception completed: append returned tokens to the context."""
+    def resume(self, now: float, n_returned: Optional[int] = None):
+        """Interception completed: append returned tokens to the context.
+        ``n_returned`` is the actual count delivered (session resumes);
+        None falls back to the scripted interception's declared count."""
         assert self.current_int is not None
-        self.target_ctx += self.current_int.returned_tokens
+        if n_returned is None:
+            n_returned = self.current_int.returned_tokens
+        self.target_ctx += n_returned
         self.paused_time += now - self.t_call
         self.current_int = None
 

@@ -196,9 +196,12 @@ class Scheduler:
             self._recompute_debt[req.rid] = max(0, debt - n_tokens)
         self.stats.cache_hit_tokens += n_tokens
 
-    def notify_resumed(self, req: Request, now: float):
-        """Interception finished: returned tokens arrive, request resumes."""
-        req.resume(now)
+    def notify_resumed(self, req: Request, now: float,
+                       n_returned: Optional[int] = None):
+        """Interception finished: returned tokens arrive, request resumes.
+        ``n_returned`` is the actual delivered token count (session API);
+        None uses the scripted interception's declared count."""
+        req.resume(now, n_returned)
         self.paused.remove(req)
         if req in self.swap_out_order:
             self.swap_out_order.remove(req)
@@ -459,17 +462,29 @@ class Scheduler:
         for req in plan.decode:
             self.stats.decode_tokens += 1
             intc = req.advance_decode(end_time)
-            if req.gen_in_seg >= req.current_segment().gen_tokens:
+            seg = req.current_segment()
+            # open (session) segments never fire here: the engine consults
+            # the request's controller at the token boundary instead and
+            # routes through notify_intercepted / notify_finished
+            if not seg.open and req.gen_in_seg >= seg.gen_tokens:
                 if intc is not None:
                     events["intercepted"].append((req, intc))
                 else:
-                    req.segment_done(end_time)
-                    self.running.remove(req)
-                    del self.live[req.rid]
-                    self._recompute_debt.pop(req.rid, None)
-                    self._cache_credit.pop(req.rid, None)
+                    self.notify_finished(req, end_time)
                     events["finished"].append(req)
         return events
+
+    def notify_finished(self, req: Request, now: float):
+        """Finish bookkeeping, shared by apply_plan's scripted path and
+        the engine's session boundaries (the caller's controller ended the
+        request). The request's current segment must be closed with no
+        interception (scripted, or via Request.close_segment(None))."""
+        req.segment_done(now)
+        assert req.phase == Phase.FINISHED
+        self.running.remove(req)
+        del self.live[req.rid]
+        self._recompute_debt.pop(req.rid, None)
+        self._cache_credit.pop(req.rid, None)
 
     # ------------------------------------------------------------------
     def has_work(self) -> bool:

@@ -1,7 +1,18 @@
-"""Serving launcher: run the intercept-aware engine on a workload.
+"""Serving launcher: drive the intercept-aware engine through the
+first-class session API (DESIGN.md §11).
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --tiny \
         --policy infercept --requests 8 --rate 2.0
+
+Two clients share one engine, demonstrating the API/executor boundary:
+
+  * a ``ScriptedClient`` replays the Table-1 workload — the legacy closed
+    loop expressed as sessions whose interceptions fire by generated-token
+    count and resume from the engine's virtual-time stub;
+  * one live session with caller-driven interception: a detector pauses it
+    mid-generation and a ``WallClockToolExecutor`` round-trips a real
+    Python "tool", its measured wall-clock latency becoming the
+    interception's virtual duration.
 
 CPU demo path: real model, paged KV, virtual clock. The full-scale sharded
 serve_step is exercised by launch.dryrun.
@@ -13,8 +24,40 @@ import time
 
 from repro.configs import get_config
 from repro.core import POLICIES
+from repro.core.request import InterceptDirective, Segment
+from repro.serving.api_executor import WallClockToolExecutor
 from repro.serving.engine import Engine
+from repro.serving.session import (InterceptEvent, SamplingParams,
+                                   ScriptedClient)
 from repro.serving.workloads import make_workload
+
+
+def scale_to_budget(reqs, max_len: int, *, prompt_cap: int = 0,
+                    gen_cap: int = 16, ret_cap: int = 8,
+                    max_segments: int = 4):
+    """Clamp scripted requests to a demo engine's context budget.
+    ``prompt_cap`` defaults to max_len // 4."""
+    prompt_cap = prompt_cap or max_len // 4
+    for r in reqs:
+        r.prompt_len = min(r.prompt_len, prompt_cap)
+        if r.prompt_tokens is not None:
+            # keep the prompt_len == len(prompt_tokens) invariant for
+            # explicit-prompt (agent/session) workloads
+            r.prompt_tokens = r.prompt_tokens[:r.prompt_len]
+        r.target_ctx = r.prompt_len
+        for s in r.segments:
+            s.gen_tokens = min(s.gen_tokens, gen_cap)
+            if s.interception:
+                s.interception.returned_tokens = min(
+                    s.interception.returned_tokens, ret_cap)
+        r.segments = r.segments[:max_segments]
+        # an empty script has no final segment to terminate on — give it
+        # one instead of assuming segments[-1] exists
+        if not r.segments:
+            r.segments = [Segment(gen_tokens=8, interception=None)]
+        elif r.segments[-1].interception is not None:
+            r.segments[-1].interception = None
+    return reqs
 
 
 def main():
@@ -28,40 +71,58 @@ def main():
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--pages", type=int, default=128)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature for the live demo session")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, tiny=args.tiny)
-    reqs = make_workload(seed=0, n_requests=args.requests,
-                         rate_rps=args.rate, max_ctx=args.max_len)
-    for r in reqs:  # scale scripts to the engine's context budget
-        r.prompt_len = min(r.prompt_len, args.max_len // 4)
-        r.target_ctx = r.prompt_len
-        for s in r.segments:
-            s.gen_tokens = min(s.gen_tokens, 16)
-            if s.interception:
-                s.interception.returned_tokens = min(
-                    s.interception.returned_tokens, 8)
-        r.segments = r.segments[:4]
-        if r.segments[-1].interception is not None:
-            r.segments[-1].interception = None
+    reqs = scale_to_budget(
+        make_workload(seed=0, n_requests=args.requests, rate_rps=args.rate,
+                      max_ctx=args.max_len), args.max_len)
 
     eng = Engine(cfg, POLICIES[args.policy], page_size=args.page_size,
                  n_pages=args.pages, max_model_len=args.max_len)
-    for r in reqs:
-        eng.add_request(r)
+    scripted = ScriptedClient(eng, retain_events=True)
+    handles = scripted.submit(reqs)
+    client = scripted.client
+
+    # one live session: the caller intercepts at the 8th generated token
+    # and a real Python tool supplies the returned ids
+    def detector(req, tid, now):
+        if req.output_tokens == 8 and req.seg_idx == 0:
+            return InterceptDirective(kind="tool", duration_hint=0.1,
+                                      reason="detector")
+        return None
+
+    def calculator(call):
+        return [(call.trigger_token_id or 0) % cfg.vocab_size, 7, 42]
+
+    live = client.submit(
+        list(range(32)),
+        SamplingParams(temperature=args.temperature, top_k=16, seed=1),
+        detector=detector, max_new_tokens=24,
+        tools=WallClockToolExecutor(calculator))
+
     t0 = time.time()
-    finished = eng.run()
+    events = client.poll()
     wall = time.time() - t0
-    print(f"policy={args.policy} finished={len(finished)}/{len(reqs)} "
+    finished = [h for h in handles + [live] if h.finished]
+    intercepts = sum(isinstance(e, InterceptEvent) for e in events)
+    print(f"policy={args.policy} finished={len(finished)}/{len(handles) + 1} "
+          f"events={len(events)} intercepts={intercepts} "
           f"virtual_time={eng.now:.2f}s wall={wall:.1f}s")
     st = eng.sched.stats
     print(f"decode_tokens={st.decode_tokens} recompute={st.recompute_tokens} "
           f"fresh={st.fresh_tokens} swapped_out={st.swapped_out_tokens} "
           f"preserves={st.preserves} discards={st.discards}")
-    for r in finished[:4]:
-        m = r.latency_metrics()
-        print(f"  rid={r.rid} out={r.output_tokens}tok "
-              f"norm_lat={m['normalized']*1e3:.2f}ms/tok "
+    print(f"live session: state={live.state} "
+          f"stream_len={len(client.token_ids(live))} "
+          f"out={live.request.output_tokens}tok "
+          f"paused={live.request.paused_time * 1e3:.2f}ms")
+    for h in finished[:4]:
+        m = h.request.latency_metrics()
+        print(f"  rid={h.rid} out={m['output_tokens']}tok "
+              f"norm_lat={m['normalized'] * 1e3:.2f}ms/tok "
               f"ttft={m['ttft']:.3f}s")
 
 

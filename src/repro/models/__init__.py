@@ -1,1 +1,1 @@
-from repro.models.model import LM, ForwardOut  # noqa: F401
+from repro.models.model import LM, ForwardOut, sample_tokens  # noqa: F401

@@ -31,6 +31,42 @@ class ForwardOut:
     cache: Any             # decode cache pytree or None
 
 
+def sample_tokens(flat_logits, temps, top_ks, seeds, positions):
+    """Per-row token sampling, shared by the fused on-device path and the
+    host-side per-call oracle paths (DESIGN.md §11).
+
+    flat_logits: (B, V) float; temps (B,) float — <= 0 means greedy argmax
+    (the differential oracle); top_ks (B,) int32 — <= 0 means the full
+    vocabulary; seeds (B,) int32 per-request sampling seeds; positions (B,)
+    int32 — the absolute context index the sampled token will occupy.
+
+    Stochastic rows apply top-k masking then Gumbel-max categorical
+    sampling at ``temperature``. The Gumbel noise is keyed ONLY by
+    (seed, position), so a request's sampled stream is a pure function of
+    its context, seed, and position — independent of batch composition,
+    bucketing, and scheduling policy. The §6 policy-equivalence property
+    therefore survives stochastic sampling, and the fused/unfused/gather
+    paths stay bit-identical (they feed this function the same logits).
+    """
+    flat = flat_logits.astype(jnp.float32)
+    B, V = flat.shape
+    greedy = jnp.argmax(flat, axis=-1).astype(jnp.int32)
+    k = jnp.where(top_ks > 0, top_ks, V)
+    srt = jnp.flip(jnp.sort(flat, axis=-1), axis=-1)        # descending
+    kth = jnp.take_along_axis(
+        srt, jnp.clip(k - 1, 0, V - 1)[:, None], axis=-1)   # (B, 1)
+    masked = jnp.where(flat >= kth, flat, -jnp.inf)         # ties kept
+
+    def gumbel_row(seed, pos):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), pos)
+        return jax.random.gumbel(key, (V,), jnp.float32)
+
+    noise = jax.vmap(gumbel_row)(seeds, positions)
+    t = jnp.maximum(temps, 1e-6).astype(jnp.float32)[:, None]
+    stoch = jnp.argmax(masked / t + noise, axis=-1).astype(jnp.int32)
+    return jnp.where(temps > 0, stoch, greedy)
+
+
 class LM:
     def __init__(self, cfg: ModelConfig):
         self.cfg = cfg
@@ -302,14 +338,21 @@ class LM:
         return self.logits(params, x), tuple(new_pools)
 
     def forward_mixed_paged(self, params, tokens, tok_seq, tok_pos, q_last,
-                            pools, block_tables, *, embeds=None,
-                            window_override="cfg", discard_pid=None):
+                            pools, block_tables, sampling=None, *,
+                            embeds=None, window_override="cfg",
+                            discard_pid=None):
         """Fused mixed-batch iteration (DESIGN.md §10): every prefill
         chunk's tokens and every decode's single token of one scheduler
         iteration, flattened into a single ragged batch and executed in ONE
         dispatch — one kv_append scatter per layer covering all new tokens,
-        one ragged paged-attention pass, and greedy sampling on device so
-        only int32 token ids need to cross the host boundary.
+        one ragged paged-attention pass, and sampling on device so only
+        int32 token ids need to cross the host boundary.
+
+        ``sampling`` is None for pure-greedy batches (argmax, the
+        differential oracle) or a (temps (B,), top_ks (B,), seeds (B,))
+        tuple applied per sequence row by ``sample_tokens`` — the sampled
+        token's position is derived on device as tok_pos[q_last] + 1
+        (DESIGN.md §11).
 
         tokens: (N,) int32 flat new-token ids (or (N, K) audio; or None
         with embeds (N, d)); tok_seq (N,) int32 names each token's
@@ -358,10 +401,15 @@ class LM:
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         last = x[q_last]                                  # (B, d)
         logits = self.logits(params, last)
-        # greedy sampling on device: argmax of the last codebook's row —
+        # sampling on device over the last codebook's row — greedy is
         # exactly the engine's host-side np.argmax(...reshape(-1, V)[-1])
         flat = logits.reshape(logits.shape[0], -1, cfg.vocab_size)[:, -1]
-        sampled = jnp.argmax(flat, axis=-1).astype(jnp.int32)
+        if sampling is None:
+            sampled = jnp.argmax(flat, axis=-1).astype(jnp.int32)
+        else:
+            temps, top_ks, seeds = sampling
+            sampled = sample_tokens(flat, temps, top_ks, seeds,
+                                    tok_pos[q_last] + 1)
         return sampled, logits, tuple(new_pools)
 
     def extend_step_paged(self, params, tokens, start, n_new, pools,

@@ -1,1 +1,9 @@
 from repro.serving import workloads  # noqa: F401
+from repro.serving.api_executor import (ToolCall, ToolExecutor,  # noqa: F401
+                                        ToolResult,
+                                        VirtualTimeToolExecutor,
+                                        WallClockToolExecutor)
+from repro.serving.session import (FinishEvent, InferCeptClient,  # noqa: F401
+                                   InterceptEvent, SamplingParams,
+                                   ScriptedClient, SessionController,
+                                   SessionHandle, TokenEvent)

@@ -1,13 +1,35 @@
-"""Augmentation ("API") executor.
+"""Tool ("API") execution at the serving boundary (the paper's Fig. 6).
 
-In production this component performs the actual tool / model / human
-round-trip (the paper's API executor, Fig. 6). Here the six augmentation
-types are deterministic stubs: completion times come from the request
-script (Table-1-calibrated), and returned tokens are a deterministic
-function of (rid, segment) so that serving runs are exactly reproducible
-across scheduling policies — the basis of the policy-equivalence tests.
+Two halves, matching the session redesign (DESIGN.md §11):
+
+  * ``ToolExecutor`` — the CALLER-side protocol: a callable that receives a
+    ``ToolCall`` (what the model asked for, with its visible context) and
+    returns a ``ToolResult`` (the tokens to append and how long the call
+    took in virtual seconds). ``InferCeptClient`` invokes a session's
+    executor when it drains an ``InterceptEvent`` and feeds the result back
+    through ``Engine.resume_request`` — interception and resume are driven
+    from outside the engine, exactly the API/executor split the paper
+    draws. Implementations here:
+      - ``VirtualTimeToolExecutor`` — deterministic stub: returned ids are
+        a pure function of (rid, seg_idx), duration is fixed. Reproducible
+        runs, the basis of the policy-equivalence tests.
+      - ``WallClockToolExecutor`` — wraps a real Python callable; its
+        measured wall-clock latency becomes the interception's virtual
+        duration, so a live tool loop experiences the same scheduling the
+        paper models.
+
+  * ``ScriptedToolRuntime`` — the ENGINE-side virtual-time completion
+    tracker for scripted interceptions (legacy closed loop and the
+    ScriptedClient replay path): completion times come from the request
+    script (Table-1-calibrated) and returned tokens are a deterministic
+    function of (rid, segment), so serving runs are exactly reproducible
+    across scheduling policies.
 """
 from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
@@ -24,8 +46,74 @@ def prompt_token_ids(rid: int, n: int, vocab: int) -> np.ndarray:
     return rng.integers(0, vocab, size=n, dtype=np.int64)
 
 
-class APIExecutor:
-    """Tracks in-flight interceptions and their (virtual-time) completions."""
+# ---------------------------------------------------------------------------
+# caller-side protocol
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ToolCall:
+    """What the session hands the caller's executor at an interception."""
+    rid: int
+    kind: str
+    seg_idx: int                       # interception index within the session
+    trigger_token_id: Optional[int]    # the sampled id that fired (consumed)
+    context_ids: List[int]             # the session's visible token stream
+    time: float                        # engine virtual time of the intercept
+
+
+@dataclasses.dataclass(frozen=True)
+class ToolResult:
+    token_ids: List[int]               # appended to the context on resume
+    duration: float = 0.0              # virtual seconds the call took
+
+
+# A ToolExecutor is any callable ToolCall -> ToolResult.
+ToolExecutor = Callable[[ToolCall], ToolResult]
+
+
+class VirtualTimeToolExecutor:
+    """Deterministic caller-side stub: returned ids are the same pure
+    function of (rid, seg_idx) the engine's scripted runtime uses, and the
+    call takes a fixed virtual ``duration`` — runs are bit-reproducible."""
+
+    def __init__(self, vocab: int, *, n_tokens: int = 8,
+                 duration: float = 0.05):
+        self.vocab = vocab
+        self.n_tokens = n_tokens
+        self.duration = duration
+
+    def __call__(self, call: ToolCall) -> ToolResult:
+        ids = returned_token_ids(call.rid, call.seg_idx, self.n_tokens,
+                                 self.vocab)
+        return ToolResult(token_ids=[int(t) for t in ids],
+                          duration=self.duration)
+
+
+class WallClockToolExecutor:
+    """Runs a real tool: ``fn(ToolCall) -> token id sequence``. The
+    measured wall-clock latency of ``fn`` becomes the interception's
+    virtual duration (floored at ``min_duration`` so the scheduler always
+    sees a positive pause), coupling the engine's virtual clock to real
+    tool latency."""
+
+    def __init__(self, fn: Callable[[ToolCall], Sequence[int]], *,
+                 min_duration: float = 1e-6):
+        self.fn = fn
+        self.min_duration = min_duration
+
+    def __call__(self, call: ToolCall) -> ToolResult:
+        t0 = time.perf_counter()
+        ids = self.fn(call)
+        dt = time.perf_counter() - t0
+        return ToolResult(token_ids=[int(t) for t in ids],
+                          duration=max(self.min_duration, dt))
+
+
+# ---------------------------------------------------------------------------
+# engine-side scripted completions
+# ---------------------------------------------------------------------------
+class ScriptedToolRuntime:
+    """Tracks in-flight scripted interceptions and their virtual-time
+    completions (durations and returned-token counts known up front)."""
 
     def __init__(self, vocab: int):
         self.vocab = vocab
@@ -51,3 +139,8 @@ class APIExecutor:
         if not self.inflight:
             return None
         return min(t for t, _, _ in self.inflight.values())
+
+
+# Backwards-compatible name: the runtime was the whole "API executor"
+# before the caller-side protocol existed.
+APIExecutor = ScriptedToolRuntime

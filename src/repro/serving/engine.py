@@ -40,6 +40,21 @@ model with paged KV storage:
                     (DESIGN.md §8). Both execution paths route every write
                     through _ensure_writable, so COW forks work unchanged.
 
+Two lifecycles drive the same iteration machinery (DESIGN.md §11):
+
+  * closed loop   — scripted requests, run(max_steps): interceptions fire
+                    by generated-token count and the ScriptedToolRuntime
+                    completes them at script-declared virtual times. run
+                    returns a RunResult whose ``drained`` flag surfaces
+                    step exhaustion (strict=True raises).
+  * session       — caller-driven (serving.session): each request carries
+                    a controller the engine consults at every sampled-
+                    token boundary; intercepts/finishes close the open
+                    segment, emit TokenEvent/InterceptEvent/FinishEvent
+                    (poll() drains them, event_sink pushes them inline),
+                    and caller-owned interceptions resume via
+                    resume_request with out-of-band returned ids.
+
 Time is virtual (the same cost model as the simulator) so interception
 durations and swap budgets are exact and runs are reproducible; tensor math
 is real. On TPU the paged path runs the Pallas paged-attention / kv_append
@@ -49,9 +64,11 @@ the differential property tests/test_paged_engine.py pins down. The
 ``counters`` dict tracks KV bytes *copied between buffers* per phase
 (gathers, scatters, appends — attention's streaming reads are compute,
 not movement), the measurable form of the O(1)-vs-O(context) claim.
-Generated tokens are greedy-argmax, so runs across scheduling policies
-must produce IDENTICAL token streams — the strongest end-to-end
-correctness property of the stack (tested).
+Sampling is greedy argmax by default, or per-request SamplingParams
+(temperature/top-k/seed) applied on device in the fused dispatch; noise
+is keyed by (seed, position) only, so runs across scheduling policies
+must produce IDENTICAL token streams either way — the strongest
+end-to-end correctness property of the stack (tested).
 
 Scope: attention-cache architectures (the paper's scope). SSM-state archs
 are served by the slot engine in examples/ (their state is O(1) per request
@@ -61,7 +78,9 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
-from typing import Dict, List, Optional
+import heapq
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -72,11 +91,13 @@ from repro.configs.base import ModelConfig
 from repro.core.costmodel import CostModel
 from repro.core.estimator import DurationEstimator
 from repro.core.policy import PolicyConfig
-from repro.core.request import Phase, Request
+from repro.core.request import Interception, Phase, Request
 from repro.core.scheduler import Scheduler
 from repro.memory.block_manager import BlockManager
-from repro.models import LM
-from repro.serving.api_executor import (APIExecutor, prompt_token_ids)
+from repro.models import LM, sample_tokens
+from repro.serving.api_executor import (ScriptedToolRuntime,
+                                        prompt_token_ids)
+from repro.serving.session import FinishEvent, InterceptEvent, TokenEvent
 from repro.utils.hw import TPU_V5E
 
 
@@ -85,6 +106,32 @@ class ReqKV:
     tokens: List[int]                       # all known token ids
     pages: List[object]                     # ("dev", pid) | ("host", np tree)
     computed: int = 0                       # KV tokens materialized (prefix)
+
+
+class EngineStepsExhausted(RuntimeError):
+    """Engine.run hit max_steps with work still pending."""
+
+
+class RunResult(list):
+    """The finished requests, plus ``drained``: False when run() stopped
+    on step exhaustion (max_steps) with work still pending — the results
+    are partial and the caller must not treat them as a completed
+    workload."""
+
+    def __init__(self, finished: Sequence[Request], drained: bool = True):
+        super().__init__(finished)
+        self.drained = drained
+
+
+class EventBatch(list):
+    """Events drained by poll(), plus ``drained``: False when the
+    underlying run stopped on step exhaustion — the stream is truncated
+    and the caller should poll again (step exhaustion is never silent,
+    the same contract as RunResult)."""
+
+    def __init__(self, events: Sequence[object], drained: bool = True):
+        super().__init__(events)
+        self.drained = drained
 
 
 class Engine:
@@ -122,14 +169,34 @@ class Engine:
                 adopt=self.blocks.fork, release=self.blocks.free,
                 can_evict=lambda pid: self.blocks.ref_count(pid) == 1)
             self.sched.cache_probe = self._cache_probe
-        self.api = APIExecutor(cfg.vocab_size)
+        self.api = ScriptedToolRuntime(cfg.vocab_size)
         self.kv: Dict[int, ReqKV] = {}
         self.now = 0.0
         self.finished: List[Request] = []
+        # session lifecycle (DESIGN.md §11): out-of-band resumes posted by
+        # the caller (Engine.resume_request), ordered by virtual due time;
+        # events emitted at token/intercept/finish boundaries, drained by
+        # poll() when emit_events is on (InferCeptClient sets it)
+        self._resume_queue: List[Tuple[float, int, int, List[int]]] = []
+        self._resume_pending: set = set()
+        self._resume_seq = itertools.count()
+        self.emit_events = False
+        # buffer_events=False keeps the sink-only fast path: events still
+        # route inline to event_sink, but nothing is retained for poll()
+        # (batch replays that never read the drained batch)
+        self.buffer_events = True
+        self.events: List[object] = []
+        # called synchronously at emission so the client can round-trip a
+        # ToolExecutor the moment an intercept fires (virtual-time-prompt
+        # resume) instead of after the engine drains
+        self.event_sink = None
+        self._prefill_emits: List[Tuple[Request, int]] = []
         # kept sorted by DESCENDING arrival: the next request to admit is
         # at the tail, so intake is one bisect + shift and admission is an
-        # O(1) pop() — no O(n^2) re-sort or front-pop under bursty loads
+        # O(1) pop() — no O(n^2) re-sort or front-pop under bursty loads;
+        # _pending_rids mirrors the queue for O(1) rid-collision checks
         self._pending_arrivals: List[Request] = []
+        self._pending_rids: set = set()
         self.paged = paged
         self.fused = bool(fused and paged)   # the fused path runs on pools
         # KV bytes copied between buffers, split by phase (DESIGN.md §9):
@@ -182,12 +249,14 @@ class Engine:
                 p, t, s, nn, pools, bt, logits_index=li,
                 discard_pid=self.scratch_page),
             donate_argnums=(4,) if donate else ())
-        # the whole mixed iteration — every chunk, every decode, and greedy
-        # sampling — in one dispatch (DESIGN.md §10)
+        # the whole mixed iteration — every chunk, every decode, and
+        # sampling (greedy or per-request SamplingParams) — in one
+        # dispatch (DESIGN.md §10/§11)
         self._mixed_jit = jax.jit(
-            lambda p, t, ts, tp, ql, pools, bt: self.model.forward_mixed_paged(
-                p, t, ts, tp, ql, pools, bt,
-                discard_pid=self.scratch_page),
+            lambda p, t, ts, tp, ql, pools, bt, samp:
+                self.model.forward_mixed_paged(
+                    p, t, ts, tp, ql, pools, bt, samp,
+                    discard_pid=self.scratch_page),
             donate_argnums=(5,) if donate else ())
 
     @staticmethod
@@ -207,11 +276,13 @@ class Engine:
         # arrival times once _admit pops from the tail
         bisect.insort_left(self._pending_arrivals, req,
                            key=lambda r: -r.arrival)
+        self._pending_rids.add(req.rid)
 
     def _admit(self):
         while self._pending_arrivals and \
                 self._pending_arrivals[-1].arrival <= self.now:
             req = self._pending_arrivals.pop()
+            self._pending_rids.discard(req.rid)
             if req.prompt_tokens is not None:
                 toks = [int(t) % self.cfg.vocab_size
                         for t in req.prompt_tokens]
@@ -220,6 +291,128 @@ class Engine:
                     req.rid, req.prompt_len, self.cfg.vocab_size)))
             self.kv[req.rid] = ReqKV(tokens=toks, pages=[])
             self.sched.submit(req)
+
+    # ------------------------------------------------------------------
+    # session lifecycle: out-of-band resume, events, sampling
+    # ------------------------------------------------------------------
+    def resume_request(self, rid: int, token_ids: Sequence[int], *,
+                       delay: float = 0.0):
+        """The caller's side of the intercept/resume boundary (DESIGN.md
+        §11): complete an interception by appending ``token_ids`` to the
+        paused request's context at virtual time now + delay. The scripted
+        virtual-time stub never touches these requests — the resume is
+        wholly caller-owned. At least one token is required: the intercept
+        consumed its trigger, so a zero-token resume would leave the
+        request with no feed token to decode from (an empty tool result
+        should re-prompt the model with an error/sentinel token
+        instead)."""
+        if not len(token_ids):
+            raise ValueError("resume_request needs at least one returned "
+                             "token id")
+        req = self.sched.live.get(rid)
+        if req is None or req.phase != Phase.PAUSED:
+            raise ValueError(f"request {rid} is not paused "
+                             f"(phase={None if req is None else req.phase})")
+        if rid in self.api.inflight:
+            raise ValueError(f"request {rid} is owned by the scripted "
+                             "tool runtime; it resumes itself")
+        if rid in self._resume_pending:
+            raise ValueError(f"request {rid} already has a resume queued")
+        self._resume_pending.add(rid)
+        heapq.heappush(self._resume_queue,
+                       (self.now + max(0.0, delay),
+                        next(self._resume_seq), rid,
+                        [int(t) for t in token_ids]))
+
+    def _due_resumes(self):
+        """All completions due by now — scripted stub launches plus
+        caller-posted resumes — as [(req, token_ids)]."""
+        out = list(self.api.completions(self.now))
+        while self._resume_queue and self._resume_queue[0][0] <= self.now:
+            _, _, rid, toks = heapq.heappop(self._resume_queue)
+            self._resume_pending.discard(rid)
+            out.append((self.sched.live[rid], toks))
+        return out
+
+    def _emit(self, ev):
+        if not self.emit_events:
+            return
+        if self.buffer_events:
+            self.events.append(ev)
+        if self.event_sink is not None:
+            self.event_sink(ev)
+
+    def _emit_token(self, req: Request, tid: int, idx: int, t: float):
+        self._emit(TokenEvent(rid=req.rid, token_id=tid, index=idx, time=t))
+
+    def _boundary_action(self, req: Request, tid: int, end: float, events,
+                         intercepted: set, finished: set, *,
+                         pop_on_fire: bool = False) -> bool:
+        """Consult a session request's controller with the sampled token
+        ``tid`` at a token boundary. Returns True when the controller fired
+        an intercept or finish — the trigger token is consumed (popped if
+        it was already appended by a prefill), exactly as the scripted path
+        drops the sampled id of the intercepting step."""
+        ctrl = req.controller
+        if ctrl is None:
+            return False
+        act = ctrl.on_token(req, tid, end)
+        if act is None:
+            return False
+        if pop_on_fire:
+            self.kv[req.rid].tokens.pop()
+        if act == "finish":
+            req.close_segment(None)
+            self.sched.notify_finished(req, end)
+            finished.add(req.rid)
+            events["finished"].append(req)
+            return True
+        intc = Interception(kind=act.kind, duration=act.duration_hint,
+                            returned_tokens=act.returned_tokens or 0)
+        req.close_segment(intc)
+        self.sched.notify_intercepted(req, intc, end)
+        if act.returned_tokens is not None:
+            self.api.launch(req, intc, end)  # scripted stub owns the resume
+        intercepted.add(req.rid)
+        self._emit(InterceptEvent(
+            rid=req.rid, kind=act.kind, reason=act.reason,
+            trigger_token_id=tid, duration_hint=act.duration_hint,
+            caller_owned=act.returned_tokens is None, time=end))
+        return True
+
+    def _sample_row(self, req: Request, flat_row: np.ndarray,
+                    position: int) -> int:
+        """Sample one token from a host-fetched logits row on the per-call
+        oracle paths, mirroring the fused path's on-device sampling bit-
+        for-bit (same jnp ops, same (seed, position) noise key). Greedy
+        requests keep the legacy host np.argmax."""
+        sp = req.sampling
+        if sp is None or sp.greedy:
+            return int(np.argmax(flat_row))
+        out = sample_tokens(jnp.asarray(flat_row)[None, :],
+                            jnp.asarray([sp.temperature], jnp.float32),
+                            jnp.asarray([sp.top_k], jnp.int32),
+                            jnp.asarray([sp.seed], jnp.int32),
+                            jnp.asarray([position], jnp.int32))
+        return int(out[0])
+
+    def _sampling_rows(self, reqs: Sequence[Request], B_pad: int):
+        """Per-row (temps, top_ks, seeds) arrays for the fused dispatch;
+        None when every row is greedy — keeping the oracle's exact
+        argmax-only compiled graph for legacy runs."""
+        if all(r.sampling is None or r.sampling.greedy for r in reqs):
+            return None
+        temps = np.zeros(B_pad, np.float32)
+        ks = np.zeros(B_pad, np.int32)
+        seeds = np.zeros(B_pad, np.int32)
+        for b, r in enumerate(reqs):
+            sp = r.sampling
+            if sp is None:
+                continue
+            temps[b] = sp.temperature
+            ks[b] = sp.top_k
+            seeds[b] = sp.seed
+        return (jnp.asarray(temps), jnp.asarray(ks), jnp.asarray(seeds))
 
     # ------------------------------------------------------------------
     # page plumbing
@@ -549,8 +742,10 @@ class Engine:
         if st.computed == req.target_ctx and len(st.tokens) == req.target_ctx:
             row = np.asarray(jax.device_get(logits[0]))
             self.counters["logit_bytes"] += row.nbytes
-            st.tokens.append(int(np.argmax(
-                row.reshape(-1, self.cfg.vocab_size)[-1])))
+            tid = self._sample_row(
+                req, row.reshape(-1, self.cfg.vocab_size)[-1], st.computed)
+            st.tokens.append(tid)
+            self._prefill_emits.append((req, tid))
         if st.computed == req.target_ctx:
             # prefill/recompute complete: publish the context so concurrent
             # same-prefix requests can hit before this one even finishes
@@ -605,8 +800,9 @@ class Engine:
         arr = np.asarray(jax.device_get(logits))
         self.counters["logit_bytes"] += arr.nbytes
         self._decode_ids = [
-            int(np.argmax(row.reshape(-1, self.cfg.vocab_size)[-1]))
-            for row in arr[:B]]
+            self._sample_row(r, arr[b].reshape(-1, self.cfg.vocab_size)[-1],
+                             int(pos[b]) + 1)
+            for b, r in enumerate(reqs)]
         for st, p in zip(sts, pos[:B]):
             st.computed = int(p) + 1
 
@@ -660,10 +856,11 @@ class Engine:
         if self.cfg.n_codebooks:
             toks_j = jnp.broadcast_to(toks_j[:, None],
                                       (N_pad, self.cfg.n_codebooks))
+        samp = self._sampling_rows([e[0] for e in entries], B_pad)
         sampled, _logits, self.pools = self._mixed_jit(
             self.params, toks_j, jnp.asarray(tseq, jnp.int32),
             jnp.asarray(tpos, jnp.int32), jnp.asarray(qlast, jnp.int32),
-            self.pools, jnp.asarray(bt, jnp.int32))
+            self.pools, jnp.asarray(bt, jnp.int32), samp)
         ids = np.asarray(jax.device_get(sampled))
 
         n_chunk = sum(n for _, _, _, n, c in entries if c)
@@ -695,6 +892,7 @@ class Engine:
                 if st.computed == req.target_ctx \
                         and len(st.tokens) == req.target_ctx:
                     st.tokens.append(int(ids[b]))
+                    self._prefill_emits.append((req, int(ids[b])))
                 if st.computed == req.target_ctx:
                     # prefill/recompute complete: publish the context so
                     # concurrent same-prefix requests can hit early
@@ -707,12 +905,15 @@ class Engine:
     # main loop
     # ------------------------------------------------------------------
     def step(self) -> bool:
-        """One scheduler iteration; returns False when fully drained."""
+        """One scheduler iteration; returns False when no further progress
+        is possible without external input (fully drained, or every
+        remaining session is blocked on a caller-side resume)."""
         self._admit()
-        for req, toks in self.api.completions(self.now):
+        self._prefill_emits = []
+        for req, toks in self._due_resumes():
             self.kv[req.rid].tokens.extend(
                 int(t) % self.cfg.vocab_size for t in toks)
-            self.sched.notify_resumed(req, self.now)
+            self.sched.notify_resumed(req, self.now, n_returned=len(toks))
         if self.cache is not None:
             # single match point: covers fresh admissions, discarded
             # contexts re-entering after an interception, and eviction
@@ -728,6 +929,8 @@ class Engine:
             t = self.api.next_completion_time()
             if t is not None:
                 nxts.append(t)
+            if self._resume_queue:
+                nxts.append(self._resume_queue[0][0])
             if not nxts:
                 return False
             self.now = max(self.now, min(nxts))
@@ -752,15 +955,41 @@ class Engine:
         end = self.now + iter_time
         decode_reqs = list(plan.decode)
         events = self.sched.apply_plan(plan, end)
+        # the iteration's virtual time is spent: advance the clock BEFORE
+        # the boundary consults, so an inline ToolExecutor dispatch
+        # (event_sink -> resume_request) anchors its due time at the
+        # intercept's virtual time, not one iteration early
+        self.now = end
         intercepted = {r.rid for r, _ in events["intercepted"]}
         finished = {r.rid for r in events["finished"]}
+        # session boundaries for prefills that just emitted their first
+        # generated token: the controller may consume it (pop) and fire
+        for req, tid in self._prefill_emits:
+            if self._boundary_action(req, tid, end, events, intercepted,
+                                     finished, pop_on_fire=True):
+                continue
+            self._emit_token(req, tid, len(self.kv[req.rid].tokens) - 1, end)
         for b, req in enumerate(decode_reqs):
             if req.rid in intercepted or req.rid in finished:
                 continue
-            self.kv[req.rid].tokens.append(self._decode_ids[b])
+            tid = self._decode_ids[b]
+            # session-driven requests decide intercept/finish from the
+            # sampled token itself, not from a script; a fired boundary
+            # consumes the trigger (exactly the scripted path's dropped
+            # sampled id)
+            if self._boundary_action(req, tid, end, events, intercepted,
+                                     finished):
+                continue
+            st = self.kv[req.rid]
+            st.tokens.append(tid)
+            self._emit_token(req, tid, len(st.tokens) - 1, end)
         for req, intc in events["intercepted"]:
             self.sched.notify_intercepted(req, intc, end)
             self.api.launch(req, intc, end)
+            self._emit(InterceptEvent(
+                rid=req.rid, kind=intc.kind, reason="scripted",
+                trigger_token_id=None, duration_hint=intc.duration,
+                caller_owned=False, time=end))
         for req in events["finished"]:
             self.finished.append(req)
             st = self.kv[req.rid]
@@ -769,20 +998,49 @@ class Engine:
                               if e is not None and e[0] == "dev"])
             st.pages = []
             self._match_seen.pop(req.rid, None)
-        self.now = end
+            self._emit(FinishEvent(rid=req.rid, n_tokens=req.output_tokens,
+                                   time=end))
         return True
 
-    def run(self, max_steps: int = 100000):
+    def run(self, max_steps: int = 100000, *,
+            strict: bool = False) -> RunResult:
+        """Drive iterations until the engine drains or blocks on a
+        caller-side resume. Returns the finished requests; ``.drained`` is
+        False when the loop stopped on ``max_steps`` with work still
+        pending (raised as EngineStepsExhausted under ``strict``) — step
+        exhaustion is never silent."""
         steps = 0
-        while steps < max_steps:
+        drained = True
+        while True:
             more = (self._pending_arrivals or self.sched.has_work()
-                    or self.api.inflight)
+                    or self.api.inflight or self._resume_queue)
             if not more:
+                break
+            if steps >= max_steps:
+                drained = False
+                if strict:
+                    raise EngineStepsExhausted(
+                        f"run() exhausted {max_steps} steps with work "
+                        f"pending ({len(self.finished)} finished, "
+                        f"{len(self.sched.live)} live)")
                 break
             if not self.step():
                 break
             steps += 1
-        return self.finished
+        return RunResult(self.finished, drained)
+
+    def poll(self, max_steps: int = 100000, *,
+             strict: bool = False) -> EventBatch:
+        """The event-drain loop (DESIGN.md §11): advance until drained or
+        until every remaining session is blocked on an out-of-band
+        resume_request, then return the events emitted since the last
+        drain. The batch's ``drained`` flag is False when the run stopped
+        on step exhaustion instead (strict raises, as in run) — a
+        truncated event stream is never silent. Requires ``emit_events``
+        (InferCeptClient sets it)."""
+        res = self.run(max_steps, strict=strict)
+        out, self.events = self.events, []
+        return EventBatch(out, res.drained)
 
     # ------------------------------------------------------------------
     def generated_text(self, req: Request) -> List[int]:

@@ -1,0 +1,363 @@
+"""First-class session API: caller-driven intercept/resume over the engine.
+
+InferCept's core claim is that interception is a serving primitive — the
+caller pauses a request at a tool call and resumes it with appended tokens,
+instead of ending generation and resubmitting (the paper's Fig. 6
+API/executor boundary). This module is that boundary (DESIGN.md §11):
+
+  * ``InferCeptClient.submit(prompt_ids, SamplingParams) -> SessionHandle``
+    opens a session; the engine streams ``TokenEvent`` / ``InterceptEvent``
+    / ``FinishEvent`` into the handle as ``poll()`` drives iterations.
+  * Interception is requested by the CALLER — an explicit
+    ``client.intercept(handle, duration_hint)``, a stop-token set, or a
+    pluggable detector callable — never read from a script. The engine
+    consults the session's controller at every sampled-token boundary; the
+    triggering token is consumed (reported as the event's
+    ``trigger_token_id``), exactly as the scripted closed loop drops the
+    sampled id of the intercepting step.
+  * ``client.resume(handle, returned_token_ids)`` appends the tool's
+    tokens and requeues the session — or attach a ``ToolExecutor``
+    (``tools=``) and the client round-trips the call for you when it
+    drains the intercept event.
+
+``ScriptedClient`` replays the legacy Table-1 workloads through this API:
+each scripted request becomes a session whose controller fires the
+script's interceptions by generated-token count and whose returned tokens
+come from the engine's virtual-time stub. Its streams are bit-identical to
+feeding the scripted requests straight into ``Engine.run()`` — the legacy
+closed loop is now just one client of the session API (pinned by
+tests/test_session.py across all four policies).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import (Callable, Deque, Dict, List, Optional, Sequence, Union)
+
+from repro.core.request import (InterceptDirective, Request, SamplingParams,
+                                Segment)
+from repro.serving.api_executor import (ToolCall, ToolExecutor, ToolResult,
+                                        prompt_token_ids)
+
+__all__ = [
+    "SamplingParams", "TokenEvent", "InterceptEvent", "FinishEvent",
+    "SessionHandle", "SessionController", "ScriptedController",
+    "InferCeptClient", "ScriptedClient",
+]
+
+
+# ---------------------------------------------------------------------------
+# the event contract
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class TokenEvent:
+    """One generated token committed to the session's context."""
+    rid: int
+    token_id: int
+    index: int            # absolute position in the token stream
+    time: float           # engine virtual time
+
+
+@dataclasses.dataclass(frozen=True)
+class InterceptEvent:
+    """The session paused at a tool call. ``caller_owned`` means the caller
+    must resume it (``trigger_token_id`` was consumed, not appended);
+    scripted interceptions are completed by the engine's virtual-time
+    stub."""
+    rid: int
+    kind: str
+    reason: str           # explicit | stop_token | detector | scripted
+    trigger_token_id: Optional[int]
+    duration_hint: float
+    caller_owned: bool
+    time: float
+
+
+@dataclasses.dataclass(frozen=True)
+class FinishEvent:
+    rid: int
+    n_tokens: int         # generated tokens over the session's lifetime
+    time: float
+
+
+Event = Union[TokenEvent, InterceptEvent, FinishEvent]
+
+
+# ---------------------------------------------------------------------------
+# controllers: the per-token intercept/finish decision
+# ---------------------------------------------------------------------------
+class SessionController:
+    """Decides, at each sampled-token boundary, whether the session
+    continues (None), intercepts (InterceptDirective), or finishes
+    ("finish"). Priority: explicit caller request > detector > stop-token
+    set > max_new_tokens."""
+
+    def __init__(self, *, stop_tokens: Sequence[int] = (),
+                 detector: Optional[Callable] = None,
+                 max_new_tokens: Optional[int] = None,
+                 kind: str = "tool", duration_hint: float = 0.0):
+        self.stop_tokens = frozenset(int(t) for t in stop_tokens)
+        self.detector = detector       # detector(req, token_id, now)
+        self.max_new_tokens = max_new_tokens
+        self.kind = kind
+        self.duration_hint = duration_hint
+        self._pending = None           # explicit intercept()/finish()
+
+    def request_intercept(self, duration_hint: Optional[float] = None,
+                          kind: Optional[str] = None):
+        self._pending = InterceptDirective(
+            kind=kind or self.kind,
+            duration_hint=self.duration_hint if duration_hint is None
+            else duration_hint,
+            reason="explicit")
+
+    def request_finish(self):
+        self._pending = "finish"
+
+    def on_token(self, req: Request, token_id: int, now: float):
+        if self._pending is not None:
+            act, self._pending = self._pending, None
+            return act
+        if self.detector is not None:
+            act = self.detector(req, token_id, now)
+            if act is not None:
+                return act
+        if token_id in self.stop_tokens:
+            return InterceptDirective(kind=self.kind,
+                                      duration_hint=self.duration_hint,
+                                      reason="stop_token")
+        if self.max_new_tokens is not None \
+                and req.output_tokens >= self.max_new_tokens:
+            return "finish"
+        return None
+
+
+class ScriptedController:
+    """Replays a legacy segment script through the session lifecycle:
+    fires each interception when the segment's generated-token count is
+    reached — the same ``gen_in_seg >= gen_tokens`` boundary apply_plan
+    checks for scripted requests — with ``returned_tokens`` declared so the
+    engine's virtual-time stub owns the resume."""
+
+    def __init__(self, segments: Sequence[Segment]):
+        self.script = list(segments)
+        self._k = 0
+
+    def on_token(self, req: Request, token_id: int, now: float):
+        if self._k >= len(self.script):
+            return None
+        seg = self.script[self._k]
+        if req.gen_in_seg >= seg.gen_tokens:
+            self._k += 1
+            if seg.interception is None:
+                return "finish"
+            i = seg.interception
+            return InterceptDirective(kind=i.kind, duration_hint=i.duration,
+                                      returned_tokens=i.returned_tokens,
+                                      reason="scripted")
+        return None
+
+
+# ---------------------------------------------------------------------------
+# handles and clients
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class SessionHandle:
+    rid: int
+    request: Request
+    controller: object
+    tools: Optional[ToolExecutor]
+    events: Deque[Event] = dataclasses.field(default_factory=deque)
+    # queued | active | intercepted | resuming | finished
+    state: str = "queued"
+    # False = state/tool dispatch only, no per-handle event retention
+    # (batch replay paths that never read handle.events)
+    buffer_events: bool = True
+
+    def next_event(self) -> Optional[Event]:
+        return self.events.popleft() if self.events else None
+
+    @property
+    def finished(self) -> bool:
+        return self.state == "finished"
+
+
+class InferCeptClient:
+    """The session facade over one Engine. Typical loop:
+
+        client = InferCeptClient(engine)
+        h = client.submit(prompt_ids, SamplingParams(temperature=0.7),
+                          stop_tokens={TOOL_ID}, tools=my_executor)
+        while not h.finished:
+            events = client.poll()
+            ...  # inspect TokenEvents; resume() manually if tools is None
+
+    ``poll()`` advances the engine until it is drained or every remaining
+    session is blocked on a caller-side ``resume()``; sessions with an
+    attached ToolExecutor are round-tripped automatically as their
+    intercept events drain."""
+
+    def __init__(self, engine):
+        if engine.event_sink is not None:
+            raise ValueError(
+                "engine already has a client attached (event_sink is set); "
+                "one InferCeptClient per engine — a second would silently "
+                "detach the first client's sessions")
+        self.engine = engine
+        engine.emit_events = True
+        engine.event_sink = self._on_event   # inline routing + tool dispatch
+        self.handles: Dict[int, SessionHandle] = {}
+        self._rid_counter = itertools.count()
+
+    # -- session intake -------------------------------------------------
+    def _rid_taken(self, rid: int) -> bool:
+        """O(1): the rid belongs to a session, an admitted request (kv),
+        or a legacy request still in the pending-arrivals queue (added
+        directly via engine.add_request, admitted at its arrival time)."""
+        return (rid in self.handles or rid in self.engine.kv
+                or rid in self.engine._pending_rids)
+
+    def _alloc_rid(self) -> int:
+        rid = next(self._rid_counter)
+        while self._rid_taken(rid):
+            rid = next(self._rid_counter)
+        return rid
+
+    def submit(self, prompt_ids: Sequence[int],
+               sampling: Optional[SamplingParams] = None, *,
+               arrival: Optional[float] = None, rid: Optional[int] = None,
+               stop_tokens: Sequence[int] = (),
+               detector: Optional[Callable] = None,
+               max_new_tokens: Optional[int] = None,
+               tools: Optional[ToolExecutor] = None,
+               kind: str = "tool", duration_hint: float = 0.0,
+               controller: Optional[object] = None,
+               buffer_events: bool = True) -> SessionHandle:
+        """Open a session. ``controller`` overrides the default
+        SessionController (advanced: ScriptedClient uses this)."""
+        if rid is None:
+            rid = self._alloc_rid()
+        assert not self._rid_taken(rid), f"rid {rid} already in use"
+        if controller is None:
+            controller = SessionController(
+                stop_tokens=stop_tokens, detector=detector,
+                max_new_tokens=max_new_tokens, kind=kind,
+                duration_hint=duration_hint)
+        req = Request.dynamic(rid, self.engine.now if arrival is None
+                              else arrival, list(map(int, prompt_ids)),
+                              sampling=sampling, controller=controller)
+        handle = SessionHandle(rid=rid, request=req, controller=controller,
+                               tools=tools, buffer_events=buffer_events)
+        self.handles[rid] = handle
+        self.engine.add_request(req)
+        return handle
+
+    # -- the event-drain loop -------------------------------------------
+    def _on_event(self, ev: Event):
+        """Engine sink, called synchronously at emission: route the event
+        to its session and round-trip an attached ToolExecutor the moment
+        the intercept fires — the resume lands at the intercept's virtual
+        time + tool duration, not after the engine drains."""
+        h = self.handles.get(ev.rid)
+        if h is None:
+            return                     # legacy scripted request, no session
+        if h.buffer_events:
+            h.events.append(ev)
+        if isinstance(ev, TokenEvent):
+            h.state = "active"
+        elif isinstance(ev, FinishEvent):
+            h.state = "finished"
+        elif isinstance(ev, InterceptEvent):
+            h.state = "intercepted"
+            if ev.caller_owned and h.tools is not None:
+                self._dispatch_tool(h, ev)
+
+    def poll(self, max_steps: int = 100_000, *, strict: bool = False):
+        """Advance the engine until it drains or every remaining session
+        is blocked on a manual resume(); attached ToolExecutors are
+        round-tripped inline as their intercepts fire. Returns the events
+        emitted since the last poll as an EventBatch whose ``drained``
+        flag is False when the run stopped on step exhaustion instead
+        (strict raises) — a truncated stream is never silent."""
+        return self.engine.poll(max_steps, strict=strict)
+
+    def _dispatch_tool(self, handle: SessionHandle, ev: InterceptEvent):
+        call = ToolCall(rid=handle.rid, kind=ev.kind,
+                        seg_idx=handle.request.seg_idx,
+                        trigger_token_id=ev.trigger_token_id,
+                        context_ids=self.token_ids(handle), time=ev.time)
+        res: ToolResult = handle.tools(call)
+        self.resume(handle, res.token_ids, delay=res.duration)
+
+    # -- the caller's side of the intercept/resume boundary -------------
+    def intercept(self, handle: SessionHandle,
+                  duration_hint: Optional[float] = None,
+                  kind: Optional[str] = None):
+        """Request an interception; takes effect at the session's next
+        sampled-token boundary."""
+        handle.controller.request_intercept(duration_hint, kind)
+
+    def finish(self, handle: SessionHandle):
+        """End the session at its next sampled-token boundary."""
+        handle.controller.request_finish()
+
+    def resume(self, handle: SessionHandle, returned_token_ids:
+               Sequence[int], *, delay: float = 0.0):
+        """Complete an interception: the returned ids join the context
+        after ``delay`` virtual seconds and decoding requeues."""
+        self.engine.resume_request(handle.rid, returned_token_ids,
+                                   delay=delay)
+        # still paused until the queued resume falls due; the first
+        # post-resume TokenEvent flips the state to "active"
+        handle.state = "resuming"
+
+    # -- stream access ---------------------------------------------------
+    def token_ids(self, handle: SessionHandle) -> List[int]:
+        """The session's full visible stream (prompt + generated +
+        returned tokens)."""
+        return list(self.engine.kv[handle.rid].tokens)
+
+    def streams(self) -> Dict[int, List[int]]:
+        return {rid: self.token_ids(h) for rid, h in self.handles.items()}
+
+
+class ScriptedClient:
+    """Replays scripted (Table-1) workloads through the session API — the
+    legacy closed loop expressed as just another client. Prompt ids and
+    returned ids are the same deterministic functions of (rid, seg) the
+    legacy engine uses, so streams are bit-identical to Engine.run() on
+    the scripted requests (the §11 equivalence pin)."""
+
+    def __init__(self, engine, *, retain_events: bool = False):
+        self.client = InferCeptClient(engine)
+        # replay is a batch path: events route inline through the sink for
+        # state/bookkeeping, but nothing reads the drained batch — don't
+        # retain O(total tokens) of event objects unless asked
+        engine.buffer_events = retain_events
+
+    def submit(self, requests: Sequence[Request]) -> List[SessionHandle]:
+        vocab = self.client.engine.cfg.vocab_size
+        handles = []
+        for r in requests:
+            prompt = (list(map(int, r.prompt_tokens))
+                      if r.prompt_tokens is not None
+                      else [int(t) for t in
+                            prompt_token_ids(r.rid, r.prompt_len, vocab)])
+            handles.append(self.client.submit(
+                prompt, r.sampling, arrival=r.arrival, rid=r.rid,
+                controller=ScriptedController(r.segments),
+                buffer_events=False))   # replay never reads handle.events
+        return handles
+
+    def replay(self, requests: Sequence[Request],
+               max_steps: int = 1_000_000) -> Dict[int, List[int]]:
+        """Submit the whole workload, drain it, and return the per-request
+        token streams (prompt + generated + returned)."""
+        handles = self.submit(requests)
+        # strict: step exhaustion raises EngineStepsExhausted rather than
+        # falling through to a misleading did-not-drain assertion
+        self.client.poll(max_steps, strict=True)
+        unfinished = [h.rid for h in handles if not h.finished]
+        assert not unfinished, f"sessions did not drain: {unfinished}"
+        return {h.rid: self.client.token_ids(h) for h in handles}

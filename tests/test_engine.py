@@ -74,3 +74,23 @@ def test_engine_rejects_ssm_archs():
     cfg = get_config("xlstm-350m", tiny=True)
     with pytest.raises(AssertionError):
         Engine(cfg, POLICIES["vllm"])
+
+
+def test_run_surfaces_step_exhaustion():
+    """run(max_steps) must never return partial results silently: the
+    RunResult's ``drained`` flag reports step exhaustion, and
+    ``strict=True`` raises instead."""
+    from repro.serving.engine import EngineStepsExhausted
+    cfg = get_config("llama3.2-1b", tiny=True)
+    reqs = _small_workload(2)
+    eng = Engine(cfg, POLICIES["vllm"], page_size=16, n_pages=64,
+                 max_model_len=192, seed=0)
+    for r in copy.deepcopy(reqs):
+        eng.add_request(r)
+    partial = eng.run(max_steps=2)
+    assert partial.drained is False
+    assert len(partial) < len(reqs)
+    with pytest.raises(EngineStepsExhausted):
+        eng.run(max_steps=0, strict=True)
+    done = eng.run()
+    assert done.drained is True and len(done) == len(reqs)
