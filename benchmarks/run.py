@@ -519,6 +519,90 @@ def bench_serve_sweep(quick=False):
         json.dump(results, f, indent=2)
 
 
+def bench_overlap_sweep(quick=False):
+    """Pipelined engine step (DESIGN.md §12): overlap-on vs overlap-off on
+    the real engine for the swap-heavy policies — swap-hidden fraction
+    (DMA bytes that fit under the model window), tool-overlap fraction
+    (virtual tool pause coinciding with engine-busy time), pipeline
+    bubbles, and p50/p99 normalized latency per mode; greedy token streams
+    are asserted bit-identical overlap on vs off. Writes
+    benchmarks/overlap_sweep.json."""
+    import json
+    import os
+    from repro.configs import get_config
+    from repro.core import POLICIES
+    from repro.launch.serve import scale_to_budget
+    from repro.serving.engine import Engine
+    from repro.serving.workloads import make_workload
+
+    cfg = get_config("llama3.2-1b", tiny=True)
+    n = 6 if quick else 12
+    reqs = scale_to_budget(
+        make_workload(seed=13, n_requests=n, rate_rps=2.0, max_ctx=220),
+        256, prompt_cap=48, gen_cap=12, ret_cap=8, max_segments=3)
+
+    def pcts(vals):
+        return (round(float(np.percentile(vals, 50)), 5),
+                round(float(np.percentile(vals, 99)), 5))
+
+    results = []
+    for policy in ["swap", "infercept"]:
+        streams = {}
+        rows = {}
+        for overlap in (True, False):
+            eng = Engine(cfg, POLICIES[policy], page_size=16, n_pages=128,
+                         max_model_len=256, seed=0, overlap=overlap)
+            for r in copy.deepcopy(reqs):
+                eng.add_request(r)
+            t0 = time.time()
+            fin = eng.run()
+            wall = time.time() - t0
+            assert fin.drained and len(fin) == len(reqs), (policy, overlap)
+            streams[overlap] = {r.rid: eng.generated_text(r) for r in fin}
+            metrics = [r.latency_metrics() for r in fin]
+            nl_p50, nl_p99 = pcts([m["normalized"] for m in metrics])
+            c = eng.counters
+            st = eng.sched.stats
+            planned_bytes = (st.swapped_out_tokens
+                             + st.swapped_in_tokens) * eng.cost.m_bytes
+            tool_s = c["tool_seconds"]
+            rows[overlap] = {
+                "policy": policy,
+                "overlap": overlap,
+                "swap_hidden_bytes": int(c["swap_overlap_bytes"]),
+                "swap_planned_bytes": int(planned_bytes),
+                "swap_hidden_frac": round(
+                    c["swap_overlap_bytes"] / planned_bytes, 4)
+                    if planned_bytes else 0.0,
+                "tool_seconds": round(tool_s, 4),
+                "tool_overlap_frac": round(
+                    c["overlapped_tool_seconds"] / tool_s, 4)
+                    if tool_s else 0.0,
+                "pipeline_bubbles": int(c["pipeline_bubbles"]),
+                "pipeline_bubble_s": round(c["pipeline_bubble_s"], 6),
+                "norm_lat_p50_s_per_tok": nl_p50,
+                "norm_lat_p99_s_per_tok": nl_p99,
+                "virtual_time_s": round(eng.now, 4),
+                "wall_s": round(wall, 3),
+            }
+        identical = streams[True] == streams[False]
+        assert identical, f"overlap on/off streams diverged under {policy}"
+        # overlap-on must actually hide swap DMA on swap-traffic policies
+        assert rows[True]["swap_hidden_bytes"] > 0, policy
+        assert rows[False]["swap_hidden_bytes"] == 0, policy
+        for overlap in (True, False):
+            rows[overlap]["streams_identical"] = identical
+            results.append(rows[overlap])
+            _row(f"overlap_sweep_{policy}_{'on' if overlap else 'off'}",
+                 rows[overlap]["wall_s"] * 1e6,
+                 {k: v for k, v in rows[overlap].items()
+                  if k not in ("policy", "overlap", "wall_s")})
+    out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "overlap_sweep.json")
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2)
+
+
 def bench_multi_gpu_scaling(quick=False):
     """13B on 1 vs 2 GPUs, 70B on 4 (paper §5.1: distributed setting gains
     grow because more HBM per GPU is left for KV)."""
@@ -546,7 +630,8 @@ def bench_multi_gpu_scaling(quick=False):
 ALL = [bench_table1_workload, bench_fig2_end2end, bench_fig3_breakdown,
        bench_waste_s32, bench_estimator, bench_single_augment,
        bench_kernels, bench_multi_gpu_scaling, bench_prefix_cache_sweep,
-       bench_decode_sweep, bench_mixed_sweep, bench_serve_sweep]
+       bench_decode_sweep, bench_mixed_sweep, bench_serve_sweep,
+       bench_overlap_sweep]
 
 
 def main() -> None:
@@ -563,6 +648,9 @@ def main() -> None:
                     help="run only the session-API per-policy TTFT / "
                          "normalized-latency sweep "
                          "(alias for --only serve_sweep)")
+    ap.add_argument("--overlap-sweep", action="store_true",
+                    help="run only the pipelined-step overlap on/off sweep "
+                         "(alias for --only overlap_sweep)")
     args = ap.parse_args()
     if args.decode_sweep:
         args.only = "decode_sweep"
@@ -570,6 +658,8 @@ def main() -> None:
         args.only = "mixed_sweep"
     if args.serve_sweep:
         args.only = "serve_sweep"
+    if args.overlap_sweep:
+        args.only = "overlap_sweep"
     print("name,us_per_call,derived")
     for fn in ALL:
         if args.only and args.only not in fn.__name__:

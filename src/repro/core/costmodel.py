@@ -13,6 +13,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.configs.base import ModelConfig
+from repro.core.waste import overlap_stall
 from repro.utils.hw import ChipSpec, dtype_bytes
 
 
@@ -92,6 +93,18 @@ class CostModel:
     def swap_tokens_within(self, seconds: float) -> int:
         """The swap limit N_i: tokens movable for free under T_fwd (§4.1)."""
         return int(seconds * self.swap_rate_bytes / max(1, self.m_bytes))
+
+    def overlap_terms(self, t_model: float, swap_tokens: int,
+                      stall_s: float):
+        """Pipelined-step accounting (DESIGN.md §12), shared by the engine
+        and the simulator so their counters stay bit-consistent: swap DMA
+        issued alongside a forwarding window of ``t_model`` seconds hides
+        up to the link's capacity for that window; an unbudgeted transfer
+        (``stall_s`` = its total link time, the Swap baseline) stalls only
+        for the remainder — ``max(t_model, t_swap)`` instead of
+        ``t_model + t_swap``. Returns (hidden_tokens, stall_remainder_s)."""
+        hidden = min(swap_tokens, self.swap_tokens_within(t_model))
+        return hidden, (overlap_stall(t_model, stall_s) if stall_s else 0.0)
 
     @property
     def saturation_tokens(self) -> int:

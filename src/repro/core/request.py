@@ -57,11 +57,15 @@ class SamplingParams:
     """Per-request sampling configuration, applied ON DEVICE by the fused
     path (models.model.sample_tokens). temperature <= 0 means greedy argmax
     (the legacy behavior and the differential oracle); top_k <= 0 means the
-    full vocabulary. Sampling noise is keyed only by (seed, position), so a
-    request's stream is independent of batch composition and scheduling
-    policy — the §6 equivalence property survives stochastic sampling."""
+    full vocabulary; top_p outside (0, 1) disables nucleus filtering.
+    top_k and top_p compose (both masks apply, vLLM-style: the nucleus is
+    taken over the temperature-scaled distribution). Sampling noise is
+    keyed only by (seed, position), so a request's stream is independent
+    of batch composition and scheduling policy — the §6 equivalence
+    property survives stochastic sampling."""
     temperature: float = 0.0
     top_k: int = 0
+    top_p: float = 1.0
     seed: int = 0
 
     @property

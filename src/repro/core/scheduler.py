@@ -57,6 +57,9 @@ class SchedulerStats:
     # tokens restored from the prefix cache instead of being recomputed
     # (credited via notify_cache_hit; they reduce recompute debt)
     cache_hit_tokens: int = 0
+    # planned swap-ins the engine could not back with physical pages; the
+    # request was re-preempted to recompute instead of crashing the engine
+    swap_in_failures: int = 0
 
 
 class Scheduler:
@@ -180,6 +183,36 @@ class Scheduler:
         if req not in self.swap_out_order:
             self.swap_out_order.append(req)
         self.stats.swaps += 1
+
+    def notify_swap_in_failed(self, req: Request, now: float):
+        """The engine could not allocate device pages for a planned
+        swap-in: the physical pool is exhausted in a way the token-capacity
+        accounting cannot see (COW copies, cache-held pages,
+        fragmentation). Gracefully re-preempt instead of aborting the
+        engine mid-commit: the whole context — the host payload and any
+        partially restored device pages — becomes recompute debt and the
+        request requeues FCFS; admission control then waits for real
+        memory before recomputing it."""
+        self.swap_queue.remove(req)
+        dropped = req.device_tokens + req.host_tokens
+        # the host payload is dropped, not retained: zero it BEFORE the
+        # engine's on_discard hook so no host-prefix pages survive
+        req.host_tokens = 0
+        if self.on_discard is not None:
+            self.on_discard(req, dropped)
+        req.device_tokens = 0
+        if dropped:
+            self._recompute_debt[req.rid] = (
+                self._recompute_debt.get(req.rid, 0) + dropped)
+        self._cache_credit.pop(req.rid, None)
+        if req in self.swap_out_order:
+            self.swap_out_order.remove(req)
+        req.pending_swap_out = 0
+        req.decision = "discard"
+        self.stats.discards += 1
+        self.stats.swap_in_failures += 1
+        req.phase = Phase.WAITING
+        self._insert_waiting(req)
 
     def notify_cache_hit(self, req: Request, n_tokens: int):
         """The engine/simulator restored ``n_tokens`` of context from the

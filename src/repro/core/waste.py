@@ -28,6 +28,19 @@ def waste_swap(t_swap_c: float, c_batch_tokens: int, m_bytes: float) -> float:
     return 2.0 * t_swap_c * c_batch_tokens * m_bytes
 
 
+def overlap_stall(t_window: float, t_cost: float) -> float:
+    """Overlap semantics (DESIGN.md §12): a transfer (or any off-critical-
+    path work) of duration ``t_cost`` issued alongside a compute window of
+    ``t_window`` stalls the pipeline only for the remainder —
+    ``max(t_window, t_cost)`` total instead of ``t_window + t_cost``. The
+    §4.1 swap budget is the special case where the remainder is forced to
+    zero by sizing the transfer to the window. Under overlap, Eq. 3's
+    stall term is evaluated at this remainder (CostModel.overlap_terms;
+    the simulator then charges ``remainder * batch_tokens * M`` per
+    iteration exactly as it charges the serial stall)."""
+    return max(0.0, t_cost - t_window)
+
+
 def waste_chunked_discard(t_fwd_c: float, c_tokens: int, m_bytes: float,
                           n_chunks: int, t_fwd_chunk: float,
                           c_other_tokens: int) -> float:

@@ -25,7 +25,8 @@ import time
 from repro.configs import get_config
 from repro.core import POLICIES
 from repro.core.request import InterceptDirective, Segment
-from repro.serving.api_executor import WallClockToolExecutor
+from repro.serving.api_executor import (AsyncToolRuntime,
+                                        WallClockToolExecutor)
 from repro.serving.engine import Engine
 from repro.serving.session import (InterceptEvent, SamplingParams,
                                    ScriptedClient)
@@ -73,6 +74,14 @@ def main():
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature for the live demo session")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass for the live demo session")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="serial engine step (the pipelined-step oracle, "
+                         "DESIGN.md §12)")
+    ap.add_argument("--tool-workers", type=int, default=2,
+                    help="thread-pool size for off-thread tool execution "
+                         "(0 = inline, the live tool blocks the loop)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, tiny=args.tiny)
@@ -81,7 +90,10 @@ def main():
                       max_ctx=args.max_len), args.max_len)
 
     eng = Engine(cfg, POLICIES[args.policy], page_size=args.page_size,
-                 n_pages=args.pages, max_model_len=args.max_len)
+                 n_pages=args.pages, max_model_len=args.max_len,
+                 overlap=not args.no_overlap)
+    if args.tool_workers > 0:
+        eng.async_tools = AsyncToolRuntime(max_workers=args.tool_workers)
     scripted = ScriptedClient(eng, retain_events=True)
     handles = scripted.submit(reqs)
     client = scripted.client
@@ -99,7 +111,8 @@ def main():
 
     live = client.submit(
         list(range(32)),
-        SamplingParams(temperature=args.temperature, top_k=16, seed=1),
+        SamplingParams(temperature=args.temperature, top_k=16,
+                       top_p=args.top_p, seed=1),
         detector=detector, max_new_tokens=24,
         tools=WallClockToolExecutor(calculator))
 
@@ -115,6 +128,12 @@ def main():
     print(f"decode_tokens={st.decode_tokens} recompute={st.recompute_tokens} "
           f"fresh={st.fresh_tokens} swapped_out={st.swapped_out_tokens} "
           f"preserves={st.preserves} discards={st.discards}")
+    c = eng.counters
+    print(f"overlap={not args.no_overlap} "
+          f"swap_hidden_bytes={int(c['swap_overlap_bytes'])} "
+          f"pipeline_bubbles={int(c['pipeline_bubbles'])} "
+          f"tool_s={c['tool_seconds']:.3f} "
+          f"overlapped_tool_s={c['overlapped_tool_seconds']:.3f}")
     print(f"live session: state={live.state} "
           f"stream_len={len(client.token_ids(live))} "
           f"out={live.request.output_tokens}tok "
@@ -124,6 +143,7 @@ def main():
         print(f"  rid={h.rid} out={m['output_tokens']}tok "
               f"norm_lat={m['normalized'] * 1e3:.2f}ms/tok "
               f"ttft={m['ttft']:.3f}s")
+    eng.close()
 
 
 if __name__ == "__main__":

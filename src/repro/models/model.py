@@ -31,22 +31,28 @@ class ForwardOut:
     cache: Any             # decode cache pytree or None
 
 
-def sample_tokens(flat_logits, temps, top_ks, seeds, positions):
+def sample_tokens(flat_logits, temps, top_ks, top_ps, seeds, positions):
     """Per-row token sampling, shared by the fused on-device path and the
     host-side per-call oracle paths (DESIGN.md §11).
 
     flat_logits: (B, V) float; temps (B,) float — <= 0 means greedy argmax
     (the differential oracle); top_ks (B,) int32 — <= 0 means the full
-    vocabulary; seeds (B,) int32 per-request sampling seeds; positions (B,)
-    int32 — the absolute context index the sampled token will occupy.
+    vocabulary; top_ps (B,) float — nucleus mass threshold, values outside
+    (0, 1) disable the filter; seeds (B,) int32 per-request sampling
+    seeds; positions (B,) int32 — the absolute context index the sampled
+    token will occupy.
 
-    Stochastic rows apply top-k masking then Gumbel-max categorical
-    sampling at ``temperature``. The Gumbel noise is keyed ONLY by
-    (seed, position), so a request's sampled stream is a pure function of
-    its context, seed, and position — independent of batch composition,
-    bucketing, and scheduling policy. The §6 policy-equivalence property
-    therefore survives stochastic sampling, and the fused/unfused/gather
-    paths stay bit-identical (they feed this function the same logits).
+    Stochastic rows apply top-k masking, then nucleus (top-p) masking —
+    the smallest set of tokens whose temperature-scaled probability mass
+    reaches ``top_p``, sorted-cumulative-mass style, ties at the threshold
+    kept exactly as top-k keeps ties at the kth logit — then Gumbel-max
+    categorical sampling at ``temperature``. The Gumbel noise is keyed
+    ONLY by (seed, position), so a request's sampled stream is a pure
+    function of its context, seed, and position — independent of batch
+    composition, bucketing, and scheduling policy. The §6
+    policy-equivalence property therefore survives stochastic sampling,
+    and the fused/unfused/gather paths stay bit-identical (they feed this
+    function the same logits).
     """
     flat = flat_logits.astype(jnp.float32)
     B, V = flat.shape
@@ -56,13 +62,26 @@ def sample_tokens(flat_logits, temps, top_ks, seeds, positions):
     kth = jnp.take_along_axis(
         srt, jnp.clip(k - 1, 0, V - 1)[:, None], axis=-1)   # (B, 1)
     masked = jnp.where(flat >= kth, flat, -jnp.inf)         # ties kept
+    # nucleus: on the temperature-scaled distribution, keep tokens whose
+    # PRECEDING cumulative mass (descending order) is < top_p — the
+    # smallest prefix reaching the threshold, top-1 always survives; the
+    # smallest kept sorted logit becomes a value threshold so threshold
+    # ties are kept. Disabled rows get threshold 2.0 (> any reachable
+    # cumulative mass, immune to cumsum rounding hitting 1.0 early), so
+    # every token survives and ``masked`` is bit-identical to the
+    # top-k-only graph
+    t = jnp.maximum(temps, 1e-6).astype(jnp.float32)[:, None]
+    p = jnp.where((top_ps > 0) & (top_ps < 1), top_ps, 2.0)[:, None]
+    probs = jax.nn.softmax(srt / t, axis=-1)
+    keep = (jnp.cumsum(probs, axis=-1) - probs) < p
+    pth = jnp.min(jnp.where(keep, srt, jnp.inf), axis=-1, keepdims=True)
+    masked = jnp.where(flat >= pth, masked, -jnp.inf)
 
     def gumbel_row(seed, pos):
         key = jax.random.fold_in(jax.random.PRNGKey(seed), pos)
         return jax.random.gumbel(key, (V,), jnp.float32)
 
     noise = jax.vmap(gumbel_row)(seeds, positions)
-    t = jnp.maximum(temps, 1e-6).astype(jnp.float32)[:, None]
     stoch = jnp.argmax(masked / t + noise, axis=-1).astype(jnp.int32)
     return jnp.where(temps > 0, stoch, greedy)
 
@@ -349,10 +368,10 @@ class LM:
         int32 token ids need to cross the host boundary.
 
         ``sampling`` is None for pure-greedy batches (argmax, the
-        differential oracle) or a (temps (B,), top_ks (B,), seeds (B,))
-        tuple applied per sequence row by ``sample_tokens`` — the sampled
-        token's position is derived on device as tok_pos[q_last] + 1
-        (DESIGN.md §11).
+        differential oracle) or a (temps (B,), top_ks (B,), top_ps (B,),
+        seeds (B,)) tuple applied per sequence row by ``sample_tokens`` —
+        the sampled token's position is derived on device as
+        tok_pos[q_last] + 1 (DESIGN.md §11).
 
         tokens: (N,) int32 flat new-token ids (or (N, K) audio; or None
         with embeds (N, d)); tok_seq (N,) int32 names each token's
@@ -407,8 +426,8 @@ class LM:
         if sampling is None:
             sampled = jnp.argmax(flat, axis=-1).astype(jnp.int32)
         else:
-            temps, top_ks, seeds = sampling
-            sampled = sample_tokens(flat, temps, top_ks, seeds,
+            temps, top_ks, top_ps, seeds = sampling
+            sampled = sample_tokens(flat, temps, top_ks, top_ps, seeds,
                                     tok_pos[q_last] + 1)
         return sampled, logits, tuple(new_pools)
 

@@ -27,6 +27,7 @@ Two halves, matching the session redesign (DESIGN.md §11):
 """
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
 import time
 from typing import Callable, List, Optional, Sequence
@@ -108,6 +109,65 @@ class WallClockToolExecutor:
                           duration=max(self.min_duration, dt))
 
 
+class AsyncToolRuntime:
+    """Off-thread tool execution for the pipelined engine step (DESIGN.md
+    §12): ToolExecutor calls run on a thread pool, so a slow tool no
+    longer blocks the engine's wall-clock step loop — unrelated sessions
+    keep decoding while the tool is in flight.
+
+    The client submits here instead of calling the executor inline; the
+    engine drains completed calls at every plan phase and injects them
+    through ``Engine.resume_request``, anchored at the intercept's virtual
+    time plus the tool's reported duration — the same anchor the inline
+    dispatch uses, so virtual-time accounting is unchanged and only the
+    wall-clock serialization disappears. Completions are injected in
+    deterministic (intercept time, rid) order. Worker threads never touch
+    engine state; injection happens on the engine's thread."""
+
+    def __init__(self, max_workers: int = 4):
+        self._pool = concurrent.futures.ThreadPoolExecutor(
+            max_workers=max_workers, thread_name_prefix="tool")
+        self._futures = {}                 # Future -> ToolCall
+
+    @property
+    def inflight(self) -> int:
+        return len(self._futures)
+
+    def submit(self, executor: ToolExecutor, call: ToolCall):
+        self._futures[self._pool.submit(executor, call)] = call
+
+    def drain(self):
+        """Non-blocking: returns (completed, failed) — completed
+        (call, ToolResult) pairs in deterministic (intercept time, rid)
+        order, failed (call, exception) pairs for executors that raised.
+        Separating the two keeps the pop transactional: one raising
+        executor cannot discard other sessions' completed results (the
+        engine injects every completion first, THEN surfaces the failure
+        on its own thread)."""
+        done = [f for f in list(self._futures) if f.done()]
+        out, failed = [], []
+        for f in done:
+            call = self._futures.pop(f)
+            try:
+                out.append((call, f.result()))
+            except BaseException as exc:        # noqa: BLE001 — surfaced
+                failed.append((call, exc))      # by the engine, not lost
+        out.sort(key=lambda cr: (cr[0].time, cr[0].rid))
+        failed.sort(key=lambda ce: (ce[0].time, ce[0].rid))
+        return out, failed
+
+    def wait_any(self, timeout: Optional[float] = None):
+        """Block until at least one in-flight call completes (the engine's
+        idle path: nothing schedulable, everything gated on a tool)."""
+        if self._futures:
+            concurrent.futures.wait(
+                list(self._futures), timeout=timeout,
+                return_when=concurrent.futures.FIRST_COMPLETED)
+
+    def shutdown(self):
+        self._pool.shutdown(wait=False)
+
+
 # ---------------------------------------------------------------------------
 # engine-side scripted completions
 # ---------------------------------------------------------------------------
@@ -124,15 +184,16 @@ class ScriptedToolRuntime:
 
     def completions(self, now: float):
         """Pop all interceptions completed by ``now``; returns
-        [(req, returned_token_ids)] in completion order."""
+        [(req, returned_token_ids, completion_time)] in completion
+        order."""
         done = sorted((t, rid) for rid, (t, _, _) in self.inflight.items()
                       if t <= now)
         out = []
-        for _, rid in done:
+        for t, rid in done:
             _, req, intc = self.inflight.pop(rid)
             toks = returned_token_ids(req.rid, req.seg_idx,
                                       intc.returned_tokens, self.vocab)
-            out.append((req, toks))
+            out.append((req, toks, t))
         return out
 
     def next_completion_time(self):

@@ -29,7 +29,12 @@ model with paged KV storage:
                     computed instead of round-tripping the whole table.
   * swap_out/in   — page-granular HBM<->host movement staged through ONE
                     contiguous slab per request (the §4.1 coalesced
-                    transfer), numpy backing on this CPU demo path
+                    transfer), numpy backing on this CPU demo path;
+                    with overlap=True (default) the slab DMA is issued
+                    alongside the model dispatch through a double-buffered
+                    SwapStager and reconciled at commit, so the transfer
+                    hides under forwarding instead of serializing before
+                    it (DESIGN.md §12)
   * discard/evict — pages freed via the scheduler's on_discard hook
   * prefix cache  — optional (prefix_cache=True): a token-block radix tree
                     (repro.cache) indexes computed pages; admitted/resumed
@@ -54,6 +59,18 @@ Two lifecycles drive the same iteration machinery (DESIGN.md §11):
                     (poll() drains them, event_sink pushes them inline),
                     and caller-owned interceptions resume via
                     resume_request with out-of-band returned ids.
+
+Each ``step()`` is an explicit three-phase pipeline (DESIGN.md §12):
+**plan** (admission, tool/resume injection, scheduling, page-aligning the
+swap amounts), **dispatch** (swap-out staging, swap-in scatter, and the
+model call all ISSUED together, no host sync between them), **commit**
+(fetch sampled ids, collect staged swap slabs, reconcile bookkeeping,
+advance the virtual clock, consult session boundaries). ``overlap=False``
+preserves the serial execute-then-sync order as the differential oracle —
+token streams are bit-identical either way, only wall-clock concurrency
+and the overlap accounting differ. Caller-side ToolExecutors can run
+off-thread through an ``AsyncToolRuntime`` whose completions are injected
+at the next plan phase via the same resume queue the caller uses.
 
 Time is virtual (the same cost model as the simulator) so interception
 durations and swap budgets are exact and runs are reproducible; tensor math
@@ -93,9 +110,11 @@ from repro.core.estimator import DurationEstimator
 from repro.core.policy import PolicyConfig
 from repro.core.request import Interception, Phase, Request
 from repro.core.scheduler import Scheduler
+from repro.kernels.swap_pack import SwapStager
 from repro.memory.block_manager import BlockManager
 from repro.models import LM, sample_tokens
-from repro.serving.api_executor import (ScriptedToolRuntime,
+from repro.serving.api_executor import (AsyncToolRuntime,
+                                        ScriptedToolRuntime,
                                         prompt_token_ids)
 from repro.serving.session import FinishEvent, InterceptEvent, TokenEvent
 from repro.utils.hw import TPU_V5E
@@ -106,6 +125,16 @@ class ReqKV:
     tokens: List[int]                       # all known token ids
     pages: List[object]                     # ("dev", pid) | ("host", np tree)
     computed: int = 0                       # KV tokens materialized (prefix)
+
+
+@dataclasses.dataclass
+class StepInflight:
+    """Work issued by the dispatch phase, reconciled at commit (DESIGN.md
+    §12): swap-out slabs whose DMA is draining behind the model call, and
+    the fused dispatch's on-device sampled ids not yet fetched."""
+    swap_out: List[Tuple[Request, int]] = \
+        dataclasses.field(default_factory=list)   # (req, stager ticket)
+    mixed: Optional[tuple] = None                 # (entries, sampled_dev)
 
 
 class EngineStepsExhausted(RuntimeError):
@@ -143,6 +172,7 @@ class Engine:
                  cache_pages: Optional[int] = None,
                  paged: bool = True,
                  fused: bool = True,
+                 overlap: bool = True,
                  dtype=jnp.float32):
         for blk in cfg.blocks:
             assert blk.kind in ("attn", "shared_attn"), \
@@ -199,6 +229,24 @@ class Engine:
         self._pending_rids: set = set()
         self.paged = paged
         self.fused = bool(fused and paged)   # the fused path runs on pools
+        # pipelined step (DESIGN.md §12): dispatch-phase swap DMA staged
+        # through a double-buffered SwapStager and collected at commit;
+        # overlap=False is the serial execute-then-sync oracle
+        self.overlap = overlap
+        self.stager = SwapStager(depth=2)
+        # off-thread caller-side tool execution; completions are injected
+        # at the plan phase through resume_request (attach one directly or
+        # via InferCeptClient(tool_workers=...))
+        self.async_tools: Optional[AsyncToolRuntime] = None
+        # tool-overlap integral (DESIGN.md §12): per in-flight
+        # interception, [t_call, due, accum] — each executed iteration
+        # adds its exact intersection with the pause window to accum, so
+        # overlapped_tool_seconds counts ONLY busy time inside
+        # [t_call, due] (a pause spent idle accrues nothing; due is +inf
+        # for caller-owned resumes until resume_request fixes it — every
+        # iteration before the post happens before the due time, so the
+        # running total stays exact)
+        self._tool_windows: Dict[int, List[float]] = {}
         # KV bytes copied between buffers, split by phase (DESIGN.md §9):
         # gather-path decode/prefill round-trip the whole block-table view;
         # the paged path appends exactly the new tokens' slots. The fused
@@ -208,12 +256,22 @@ class Engine:
         # exactly one dispatch each), logit_bytes what the sampling
         # boundary actually moved device->host (fused: B int32 ids;
         # unfused: the full B×vocab float logits).
-        self.counters: Dict[str, int] = {
+        # Overlap accounting (DESIGN.md §12), mirrored by sim/simulator.py
+        # via the shared CostModel.overlap_terms so both stay
+        # bit-consistent: swap_overlap_bytes — swap DMA hidden under the
+        # model window; pipeline_bubbles / pipeline_bubble_s — iterations
+        # whose transfer exceeded the window and the remainder charged;
+        # tool_seconds / overlapped_tool_seconds — total virtual tool
+        # pause vs the part that overlapped engine-busy time.
+        self.counters: Dict[str, float] = {
             "decode_bytes": 0, "decode_tokens": 0,
             "prefill_bytes": 0, "prefill_tokens": 0,
             "swap_bytes": 0, "cow_bytes": 0,
             "device_dispatches": 0, "mixed_iterations": 0,
-            "logit_bytes": 0}
+            "logit_bytes": 0,
+            "swap_overlap_bytes": 0, "pipeline_bubbles": 0,
+            "pipeline_bubble_s": 0.0,
+            "tool_seconds": 0.0, "overlapped_tool_seconds": 0.0}
         # bytes one token position occupies across every layer's pool
         self.kv_token_bytes = int(sum(
             leaf.dtype.itemsize * leaf.shape[0]
@@ -319,20 +377,45 @@ class Engine:
         if rid in self._resume_pending:
             raise ValueError(f"request {rid} already has a resume queued")
         self._resume_pending.add(rid)
+        due = self.now + max(0.0, delay)
+        win = self._tool_windows.get(rid)
+        if win is not None and win[1] == float("inf"):
+            win[1] = due               # caller-owned pause: due now known
         heapq.heappush(self._resume_queue,
-                       (self.now + max(0.0, delay),
-                        next(self._resume_seq), rid,
+                       (due, next(self._resume_seq), rid,
                         [int(t) for t in token_ids]))
 
     def _due_resumes(self):
         """All completions due by now — scripted stub launches plus
-        caller-posted resumes — as [(req, token_ids)]."""
+        caller-posted resumes — as [(req, token_ids, completion_time)]."""
         out = list(self.api.completions(self.now))
         while self._resume_queue and self._resume_queue[0][0] <= self.now:
-            _, _, rid, toks = heapq.heappop(self._resume_queue)
+            due, _, rid, toks = heapq.heappop(self._resume_queue)
             self._resume_pending.discard(rid)
-            out.append((self.sched.live[rid], toks))
+            out.append((self.sched.live[rid], toks, due))
         return out
+
+    def _inject_async_tools(self):
+        """Inject off-thread ToolExecutor completions (AsyncToolRuntime)
+        through the resume queue, anchored at the intercept's virtual time
+        plus the tool's reported duration — the same anchor the inline
+        dispatch uses (the anchor is clamped to ``now`` when the engine
+        already advanced past it: virtual time never runs backwards)."""
+        if self.async_tools is None:
+            return
+        done, failed = self.async_tools.drain()
+        for call, res in done:
+            due = call.time + max(0.0, res.duration)
+            self.resume_request(call.rid, res.token_ids,
+                                delay=max(0.0, due - self.now))
+        if failed:
+            # every completed result was injected first; now surface the
+            # executor failure on the engine thread (its session stays
+            # paused — the caller decides whether to resume or finish it)
+            call, exc = failed[0]
+            raise RuntimeError(
+                f"tool executor failed for rid {call.rid} "
+                f"(kind={call.kind}, seg={call.seg_idx})") from exc
 
     def _emit(self, ev):
         if not self.emit_events:
@@ -372,7 +455,12 @@ class Engine:
         req.close_segment(intc)
         self.sched.notify_intercepted(req, intc, end)
         if act.returned_tokens is not None:
-            self.api.launch(req, intc, end)  # scripted stub owns the resume
+            # scripted stub owns the resume: the due time is known now
+            self._tool_windows[req.rid] = [end, end + intc.duration, 0.0]
+            self.api.launch(req, intc, end)
+        else:
+            # caller-owned: due fixed when resume_request posts it
+            self._tool_windows[req.rid] = [end, float("inf"), 0.0]
         intercepted.add(req.rid)
         self._emit(InterceptEvent(
             rid=req.rid, kind=act.kind, reason=act.reason,
@@ -392,18 +480,20 @@ class Engine:
         out = sample_tokens(jnp.asarray(flat_row)[None, :],
                             jnp.asarray([sp.temperature], jnp.float32),
                             jnp.asarray([sp.top_k], jnp.int32),
+                            jnp.asarray([sp.top_p], jnp.float32),
                             jnp.asarray([sp.seed], jnp.int32),
                             jnp.asarray([position], jnp.int32))
         return int(out[0])
 
     def _sampling_rows(self, reqs: Sequence[Request], B_pad: int):
-        """Per-row (temps, top_ks, seeds) arrays for the fused dispatch;
-        None when every row is greedy — keeping the oracle's exact
-        argmax-only compiled graph for legacy runs."""
+        """Per-row (temps, top_ks, top_ps, seeds) arrays for the fused
+        dispatch; None when every row is greedy — keeping the oracle's
+        exact argmax-only compiled graph for legacy runs."""
         if all(r.sampling is None or r.sampling.greedy for r in reqs):
             return None
         temps = np.zeros(B_pad, np.float32)
         ks = np.zeros(B_pad, np.int32)
+        ps = np.ones(B_pad, np.float32)
         seeds = np.zeros(B_pad, np.int32)
         for b, r in enumerate(reqs):
             sp = r.sampling
@@ -411,8 +501,10 @@ class Engine:
                 continue
             temps[b] = sp.temperature
             ks[b] = sp.top_k
+            ps[b] = sp.top_p
             seeds[b] = sp.seed
-        return (jnp.asarray(temps), jnp.asarray(ks), jnp.asarray(seeds))
+        return (jnp.asarray(temps), jnp.asarray(ks), jnp.asarray(ps),
+                jnp.asarray(seeds))
 
     # ------------------------------------------------------------------
     # page plumbing
@@ -642,41 +734,59 @@ class Engine:
         plan.swap_in = [(r, n) for r, n, _ in new_in]
         self._swap_in_pages = {r.rid: p for r, _, p in new_in}
 
-    def _exec_swap_out(self, req: Request):
-        """Stage ALL of the request's outbound pages into one contiguous
-        slab (the swap_pack coalescing of §4.1/DESIGN.md §2 — on TPU this
-        is the Pallas gather kernel) and move it host-side in a single
-        transfer, instead of one DMA per scattered page."""
+    def _stage_swap_out(self, req: Request) -> Optional[int]:
+        """Dispatch half of the outbound swap (DESIGN.md §12): issue the
+        on-device gather of ALL the request's outbound pages into one
+        contiguous staged slab (the swap_pack coalescing of §4.1/DESIGN.md
+        §2 — on TPU this is the Pallas gather kernel) WITHOUT
+        synchronizing, and free the source pages — the gather captured
+        their payload, so the allocator can hand them to this iteration's
+        swap-ins while the DMA drains behind the model call. Returns a
+        stager ticket for _complete_swap_out, or None when page alignment
+        left nothing to move."""
         st = self.kv[req.rid]
         idxs = self._swap_out_pages.get(req.rid, [])
         if not idxs:
-            return
+            return None
         pids = []
         for p in idxs:
             kind, pid = st.pages[p]
             assert kind == "dev"
             pids.append(pid)
-        ids = jnp.asarray(pids, jnp.int32)
-        slab = jax.device_get(jax.tree.map(
-            lambda leaf: jnp.take(leaf, ids, axis=1), self.pools))
+        ticket = self.stager.pack(self.pools, pids)
+        self.blocks.free(pids)
+        return ticket
+
+    def _complete_swap_out(self, req: Request, ticket: Optional[int]):
+        """Commit half: collect the staged slab host-side (blocking only
+        on that transfer) and reconcile the page table — the outbound
+        pages become ("host", payload) entries."""
+        if ticket is None:
+            return
+        st = self.kv[req.rid]
+        idxs = self._swap_out_pages.get(req.rid, [])
+        slab = self.stager.collect(ticket)
         for i, p in enumerate(idxs):
             st.pages[p] = ("host", jax.tree.map(lambda leaf: leaf[:, i],
                                                 slab))
-        self.blocks.free(pids)
         self.counters["swap_bytes"] += \
             len(idxs) * self.page * self.kv_token_bytes
 
-    def _exec_swap_in(self, req: Request):
+    def _exec_swap_in(self, req: Request) -> bool:
         """Reassemble the request's inbound pages into one staged slab and
         scatter it back into freshly allocated pool pages in a single
-        device transfer (swap_unpack on TPU)."""
+        device transfer (swap_unpack on TPU), issue-only — the model
+        dispatch consumes the updated pools without a host sync. Returns
+        False (nothing moved, no partial allocation held) when the
+        physical pool cannot back the planned pages — the caller
+        re-preempts the request instead of aborting the engine."""
         st = self.kv[req.rid]
         idxs = self._swap_in_pages.get(req.rid, [])
         if not idxs:
-            return
+            return True
         got = self._allocate_pages(len(idxs))
         if got is None:
-            raise RuntimeError("out of KV pages during swap-in")
+            return False
         payloads = []
         for p in idxs:
             kind, payload = st.pages[p]
@@ -684,15 +794,27 @@ class Engine:
             payloads.append(payload)
         slab = jax.tree.map(lambda *leaves: np.stack(leaves, axis=1),
                             *payloads)
-        ids = jnp.asarray(got, jnp.int32)
-        self.pools = jax.tree.map(
-            lambda leaf, val: leaf.at[:, ids].set(
-                jnp.asarray(val, leaf.dtype)),
-            self.pools, slab)
+        self.pools = self.stager.unpack(self.pools, got, slab)
         for i, p in enumerate(idxs):
             st.pages[p] = ("dev", got[i])
         self.counters["swap_bytes"] += \
             len(idxs) * self.page * self.kv_token_bytes
+        return True
+
+    def _swap_in_failed(self, req: Request):
+        """A planned swap-in could not be backed by physical pages
+        (exhaustion the scheduler's token accounting cannot see — COW
+        copies, cache-held pages): gracefully re-preempt via the
+        scheduler — the context becomes recompute debt, the request
+        requeues FCFS — instead of the old hard
+        ``RuntimeError("out of KV pages during swap-in")`` mid-commit."""
+        st = self.kv[req.rid]
+        self.sched.notify_swap_in_failed(req, self.now)
+        # notify's on_discard hook freed the device-resident pages and
+        # dropped the host-prefix retention (host_tokens was zeroed
+        # first); any remaining entries are host payloads to drop
+        st.pages = []
+        st.computed = 0
 
     def _exec_chunk(self, req: Request, n: int):
         st = self.kv[req.rid]
@@ -806,14 +928,17 @@ class Engine:
         for st, p in zip(sts, pos[:B]):
             st.computed = int(p) + 1
 
-    def _exec_mixed(self, plan):
+    def _dispatch_mixed(self, plan):
         """Fused mixed-batch iteration (DESIGN.md §10): flatten every chunk
         and every decode of this plan into one ragged token batch —
         flattened ids + per-token (sequence, position) routing + a stacked
         block-table matrix, bucketed for stable jit shapes — and execute it
         with a single LM.forward_mixed_paged dispatch. Greedy sampling runs
         on device, so the only device->host transfer is B int32 ids; full
-        logits stay resident (retrievable, never fetched here)."""
+        logits stay resident (retrievable, never fetched here). Issue-only
+        (DESIGN.md §12): returns (entries, sampled_dev) with the sampled
+        ids still on device — _commit_mixed fetches them, so staged swap
+        DMA drains behind the model call in between."""
         entries = []                       # (req, st, start, n, is_chunk)
         for req, n in plan.chunks:
             st = self.kv[req.rid]
@@ -831,7 +956,7 @@ class Engine:
             self._ensure_writable(st, req.target_ctx)
             entries.append((req, st, req.target_ctx, 1, False))
         if not entries:
-            return
+            return None
 
         B = len(entries)
         B_pad = self._bucket(B)
@@ -861,7 +986,6 @@ class Engine:
             self.params, toks_j, jnp.asarray(tseq, jnp.int32),
             jnp.asarray(tpos, jnp.int32), jnp.asarray(qlast, jnp.int32),
             self.pools, jnp.asarray(bt, jnp.int32), samp)
-        ids = np.asarray(jax.device_get(sampled))
 
         n_chunk = sum(n for _, _, _, n, c in entries if c)
         n_dec = B - len(plan.chunks)
@@ -881,8 +1005,16 @@ class Engine:
             + (n_dec + (pad_rows if n_dec else 0)) * mla_gather
         self.counters["decode_tokens"] += n_dec
         self.counters["device_dispatches"] += 1
-        self.counters["logit_bytes"] += ids.nbytes  # B_pad int32 ids, O(B)
+        # B_pad int32 ids, O(B) — size known without fetching
+        self.counters["logit_bytes"] += \
+            int(sampled.size) * sampled.dtype.itemsize
+        return entries, sampled
 
+    def _commit_mixed(self, entries, sampled):
+        """Commit half of the fused iteration: fetch the sampled ids (the
+        one device->host sync of the step) and reconcile bookkeeping —
+        computed counts, prefill first-token emits, decode ids."""
+        ids = np.asarray(jax.device_get(sampled))
         self._decode_ids = []
         for b, (req, st, start, n, is_chunk) in enumerate(entries):
             if is_chunk:
@@ -905,12 +1037,35 @@ class Engine:
     # main loop
     # ------------------------------------------------------------------
     def step(self) -> bool:
-        """One scheduler iteration; returns False when no further progress
-        is possible without external input (fully drained, or every
-        remaining session is blocked on a caller-side resume)."""
+        """One scheduler iteration as an explicit three-phase pipeline
+        (DESIGN.md §12): plan -> dispatch -> commit. Returns False when no
+        further progress is possible without external input (fully
+        drained, or every remaining session is blocked on a caller-side
+        resume)."""
+        plan = self._plan_phase()
+        if plan.empty:
+            return self._advance_idle()
+        inflight = self._dispatch_phase(plan)
+        self._commit_phase(plan, inflight)
+        return True
+
+    def _plan_phase(self):
+        """PLAN: admission, async-tool / resume injection, prefix-cache
+        matching, the scheduler's iteration plan, and page-aligning its
+        token-granular swap amounts. Pure host bookkeeping — nothing is
+        dispatched to the device yet."""
         self._admit()
         self._prefill_emits = []
-        for req, toks in self._due_resumes():
+        self._inject_async_tools()
+        for req, toks, t_done in self._due_resumes():
+            # tool-overlap accounting (§12): the pause's virtual duration,
+            # and the part of it that coincided with engine-busy time —
+            # tool latency hidden behind serving rather than extending it
+            # (the window's accumulated iteration intersections, exact)
+            self.counters["tool_seconds"] += max(0.0, t_done - req.t_call)
+            win = self._tool_windows.pop(req.rid, None)
+            if win is not None:
+                self.counters["overlapped_tool_seconds"] += win[2]
             self.kv[req.rid].tokens.extend(
                 int(t) % self.cfg.vocab_size for t in toks)
             self.sched.notify_resumed(req, self.now, n_returned=len(toks))
@@ -920,39 +1075,114 @@ class Engine:
             # victims — anything waiting with no context yet
             for req in list(self.sched.waiting):
                 self._try_cache_match(req)
-
         plan = self.sched.next_iteration(self.now)
-        if plan.empty:
-            nxts = []
-            if self._pending_arrivals:
-                nxts.append(self._pending_arrivals[-1].arrival)
-            t = self.api.next_completion_time()
-            if t is not None:
-                nxts.append(t)
-            if self._resume_queue:
-                nxts.append(self._resume_queue[0][0])
-            if not nxts:
-                return False
+        if not plan.empty:
+            self._page_align_swaps(plan)
+        return plan
+
+    def _advance_idle(self) -> bool:
+        """Nothing schedulable: jump the virtual clock to the next known
+        event, or block on an off-thread tool when that is the only thing
+        the engine is waiting for."""
+        nxts = []
+        if self._pending_arrivals:
+            nxts.append(self._pending_arrivals[-1].arrival)
+        t = self.api.next_completion_time()
+        if t is not None:
+            nxts.append(t)
+        if self._resume_queue:
+            nxts.append(self._resume_queue[0][0])
+        if nxts:
             self.now = max(self.now, min(nxts))
             return True
+        if self.async_tools is not None and self.async_tools.inflight:
+            # every remaining session is gated on an off-thread tool:
+            # wall-block until one completes, then inject and continue
+            self.async_tools.wait_any()
+            self._inject_async_tools()
+            return True
+        return False
 
-        self._page_align_swaps(plan)
+    def _dispatch_phase(self, plan) -> StepInflight:
+        """DISPATCH: issue this iteration's device work back-to-back with
+        no host sync in between — swap-out slab gathers (double-buffered
+        staging), swap-in slab scatters, then the model call — so the
+        host<->device DMA overlaps the model dispatch (§4.1's budget
+        premise made real). With overlap=False each transfer completes
+        synchronously in the legacy serial order, the differential
+        oracle. Swap-ins that cannot be backed by physical pages
+        re-preempt their request gracefully and drop out of the plan."""
+        inflight = StepInflight()
         for req, _ in plan.swap_out:
-            self._exec_swap_out(req)
-        for req, _ in plan.swap_in:
-            self._exec_swap_in(req)
+            ticket = self._stage_swap_out(req)
+            if self.overlap:
+                inflight.swap_out.append((req, ticket))
+            else:
+                self._complete_swap_out(req, ticket)
+        ok_in = []
+        for req, n in plan.swap_in:
+            if self._exec_swap_in(req):
+                ok_in.append((req, n))
+            else:
+                # the transfer never happened: refund its synchronous
+                # stall (unbudgeted plans charged t_swap(n) into stall_s;
+                # budgeted plans carry none, max() keeps 0) so the clock
+                # is not stalled for phantom DMA
+                plan.stall_s = max(0.0, plan.stall_s - self.cost.t_swap(n))
+                self._swap_in_failed(req)
+        plan.swap_in = ok_in
         if plan.chunks or plan.decode:
             self.counters["mixed_iterations"] += 1
         if self.fused:
-            self._exec_mixed(plan)
+            inflight.mixed = self._dispatch_mixed(plan)
+            if not self.overlap and inflight.mixed is not None:
+                self._commit_mixed(*inflight.mixed)
+                inflight.mixed = None
         else:
+            # per-call oracle paths sample host-side: their logits fetch
+            # is inherent, but staged swap-out DMA still drains behind
+            # the model calls under overlap
             for req, n in plan.chunks:
                 self._exec_chunk(req, n)
             self._exec_decode(plan.decode)
+        return inflight
 
-        iter_time = self.cost.t_fwd(max(1, plan.query_tokens),
-                                    plan.context_tokens) + plan.stall_s
-        end = self.now + iter_time
+    def _commit_phase(self, plan, inflight: StepInflight):
+        """COMMIT: the single host-sync point of the step. Fetch the fused
+        dispatch's sampled ids, collect the staged swap-out slabs
+        (reconciling page tables), charge the iteration's virtual time
+        with overlap semantics, then run the scheduler bookkeeping and
+        session boundary consults exactly as the serial engine did —
+        commit-phase reconciliation keeps every host-visible state
+        transition in the same order as overlap=False, which is why the
+        two paths are bit-identical."""
+        if inflight.mixed is not None:
+            self._commit_mixed(*inflight.mixed)
+        for req, ticket in inflight.swap_out:
+            self._complete_swap_out(req, ticket)
+
+        t_model = self.cost.t_fwd(max(1, plan.query_tokens),
+                                  plan.context_tokens)
+        if self.overlap:
+            swap_tokens = sum(n for _, n in plan.swap_out) \
+                + sum(n for _, n in plan.swap_in)
+            hidden, stall = self.cost.overlap_terms(
+                t_model, swap_tokens, plan.stall_s)
+            if swap_tokens:
+                self.counters["swap_overlap_bytes"] += \
+                    hidden * self.cost.m_bytes
+            if stall > 0.0:
+                self.counters["pipeline_bubbles"] += 1
+                self.counters["pipeline_bubble_s"] += stall
+        else:
+            stall = plan.stall_s
+        iter_time = t_model + stall
+        start = self.now
+        end = start + iter_time
+        # tool-overlap integral: this iteration's exact intersection with
+        # every in-flight pause window [t_call, due]
+        for win in self._tool_windows.values():
+            win[2] += max(0.0, min(end, win[1]) - max(start, win[0]))
         decode_reqs = list(plan.decode)
         events = self.sched.apply_plan(plan, end)
         # the iteration's virtual time is spent: advance the clock BEFORE
@@ -985,6 +1215,7 @@ class Engine:
             self._emit_token(req, tid, len(st.tokens) - 1, end)
         for req, intc in events["intercepted"]:
             self.sched.notify_intercepted(req, intc, end)
+            self._tool_windows[req.rid] = [end, end + intc.duration, 0.0]
             self.api.launch(req, intc, end)
             self._emit(InterceptEvent(
                 rid=req.rid, kind=intc.kind, reason="scripted",
@@ -1000,7 +1231,6 @@ class Engine:
             self._match_seen.pop(req.rid, None)
             self._emit(FinishEvent(rid=req.rid, n_tokens=req.output_tokens,
                                    time=end))
-        return True
 
     def run(self, max_steps: int = 100000, *,
             strict: bool = False) -> RunResult:
@@ -1013,7 +1243,9 @@ class Engine:
         drained = True
         while True:
             more = (self._pending_arrivals or self.sched.has_work()
-                    or self.api.inflight or self._resume_queue)
+                    or self.api.inflight or self._resume_queue
+                    or (self.async_tools is not None
+                        and self.async_tools.inflight))
             if not more:
                 break
             if steps >= max_steps:
@@ -1041,6 +1273,14 @@ class Engine:
         res = self.run(max_steps, strict=strict)
         out, self.events = self.events, []
         return EventBatch(out, res.drained)
+
+    def close(self):
+        """Release engine-held external resources: shuts down the
+        attached AsyncToolRuntime's worker threads (idempotent; a closed
+        engine can still be inspected, but not driven through off-thread
+        tools)."""
+        if self.async_tools is not None:
+            self.async_tools.shutdown()
 
     # ------------------------------------------------------------------
     def generated_text(self, req: Request) -> List[int]:

@@ -196,9 +196,16 @@ class InferCeptClient:
     ``poll()`` advances the engine until it is drained or every remaining
     session is blocked on a caller-side ``resume()``; sessions with an
     attached ToolExecutor are round-tripped automatically as their
-    intercept events drain."""
+    intercept events drain.
 
-    def __init__(self, engine):
+    ``tool_workers > 0`` attaches an ``AsyncToolRuntime`` to the engine:
+    attached ToolExecutors then run OFF-THREAD (DESIGN.md §12) and their
+    completions are injected at the engine's next plan phase, anchored at
+    the same intercept-time + duration virtual instant the inline
+    dispatch uses — a slow tool no longer wall-clock-blocks unrelated
+    sessions' progress."""
+
+    def __init__(self, engine, *, tool_workers: int = 0):
         if engine.event_sink is not None:
             raise ValueError(
                 "engine already has a client attached (event_sink is set); "
@@ -207,6 +214,9 @@ class InferCeptClient:
         self.engine = engine
         engine.emit_events = True
         engine.event_sink = self._on_event   # inline routing + tool dispatch
+        if tool_workers > 0:
+            from repro.serving.api_executor import AsyncToolRuntime
+            engine.async_tools = AsyncToolRuntime(max_workers=tool_workers)
         self.handles: Dict[int, SessionHandle] = {}
         self._rid_counter = itertools.count()
 
@@ -287,6 +297,12 @@ class InferCeptClient:
                         seg_idx=handle.request.seg_idx,
                         trigger_token_id=ev.trigger_token_id,
                         context_ids=self.token_ids(handle), time=ev.time)
+        if self.engine.async_tools is not None:
+            # off-thread: the engine injects the completion at its next
+            # plan phase through the same resume queue (DESIGN.md §12)
+            self.engine.async_tools.submit(handle.tools, call)
+            handle.state = "resuming"
+            return
         res: ToolResult = handle.tools(call)
         self.resume(handle, res.token_ids, delay=res.duration)
 
@@ -311,6 +327,12 @@ class InferCeptClient:
         # still paused until the queued resume falls due; the first
         # post-resume TokenEvent flips the state to "active"
         handle.state = "resuming"
+
+    def close(self):
+        """Shut down the off-thread tool workers (no-op without
+        ``tool_workers``); call when done with a tool_workers client so
+        pool threads don't outlive it."""
+        self.engine.close()
 
     # -- stream access ---------------------------------------------------
     def token_ids(self, handle: SessionHandle) -> List[int]:

@@ -48,6 +48,14 @@ class SimResult:
     stall_time: float = 0.0
     stats: Optional[object] = None
     cache_stats: Optional[object] = None   # CacheStats when prefix_cache
+    # overlap accounting (DESIGN.md §12), mirroring the engine's counters
+    # through the shared CostModel.overlap_terms — bit-consistent formulas
+    overlap: bool = False
+    swap_overlap_bytes: float = 0.0
+    pipeline_bubbles: int = 0
+    pipeline_bubble_s: float = 0.0
+    tool_seconds: float = 0.0
+    overlapped_tool_seconds: float = 0.0
 
     # ---- headline metrics -------------------------------------------------
     def normalized_latency(self, pct: float = 50.0) -> float:
@@ -100,7 +108,8 @@ def simulate(requests: Sequence[Request], policy: PolicyConfig,
              profiles: Optional[dict] = None, max_time: float = 36000.0,
              max_iters: int = 2_000_000, prefix_cache: bool = False,
              cache_page_size: int = 16,
-             cache_max_pages: Optional[int] = None) -> SimResult:
+             cache_max_pages: Optional[int] = None,
+             overlap: bool = False) -> SimResult:
     if estimator is None:
         estimator = DurationEstimator(mode=policy.estimator,
                                       profiles=profiles)
@@ -110,8 +119,12 @@ def simulate(requests: Sequence[Request], policy: PolicyConfig,
     now = 0.0
     iters = 0
     res = SimResult(policy=policy.name, finished=[], sim_time=0.0,
-                    iterations=0)
+                    iterations=0, overlap=overlap)
     m = cost.m_bytes
+    # tool-overlap integral, mirroring the engine (DESIGN.md §12): per
+    # in-flight interception [t_call, due, accum]; each iteration adds its
+    # exact intersection with the pause window
+    tool_windows: Dict[int, List[float]] = {}
 
     # ---- prefix-cache mirror (same accounting as Engine) ------------------
     cache = None
@@ -188,6 +201,10 @@ def simulate(requests: Sequence[Request], policy: PolicyConfig,
         admit(now)
         while resume_heap and resume_heap[0][0] <= now:
             t, _, req = heapq.heappop(resume_heap)
+            res.tool_seconds += max(0.0, t - req.t_call)
+            win = tool_windows.pop(req.rid, None)
+            if win is not None:
+                res.overlapped_tool_seconds += win[2]
             sched.notify_resumed(req, now)
         if cache is not None:
             for req in list(sched.waiting):
@@ -207,9 +224,27 @@ def simulate(requests: Sequence[Request], policy: PolicyConfig,
             continue
 
         iters += 1
-        iter_time = cost.t_fwd(max(1, plan.query_tokens),
-                               plan.context_tokens) + plan.stall_s
+        t_model = cost.t_fwd(max(1, plan.query_tokens),
+                             plan.context_tokens)
+        if overlap:
+            # pipelined-step charging (DESIGN.md §12): swap DMA hides
+            # under the model window, only the remainder stalls — the
+            # same CostModel.overlap_terms the engine's commit phase uses
+            swap_tokens = (sum(n for _, n in plan.swap_out)
+                           + sum(n for _, n in plan.swap_in))
+            hidden, stall = cost.overlap_terms(t_model, swap_tokens,
+                                               plan.stall_s)
+            if swap_tokens:
+                res.swap_overlap_bytes += hidden * m
+            if stall > 0.0:
+                res.pipeline_bubbles += 1
+                res.pipeline_bubble_s += stall
+        else:
+            stall = plan.stall_s
+        iter_time = t_model + stall
         end = now + iter_time
+        for win in tool_windows.values():
+            win[2] += max(0.0, min(end, win[1]) - max(now, win[0]))
 
         # ---- waste accounting over [now, end) -----------------------------
         res.gpu_byte_seconds += iter_time * sched.gpu_capacity * m
@@ -223,10 +258,10 @@ def simulate(requests: Sequence[Request], policy: PolicyConfig,
             # held during the recompute-attributable part of the iteration.
             res.waste_recompute += (iter_time * rec_share
                                     * sched.gpu_used() * m)
-        res.forward_time += iter_time - plan.stall_s
-        res.stall_time += plan.stall_s
-        if plan.stall_s:
-            res.waste_swap_stall += plan.stall_s * sched.gpu_used() * m
+        res.forward_time += iter_time - stall
+        res.stall_time += stall
+        if stall:
+            res.waste_swap_stall += stall * sched.gpu_used() * m
 
         events = sched.apply_plan(plan, end)
         if cache is not None:
@@ -239,6 +274,7 @@ def simulate(requests: Sequence[Request], policy: PolicyConfig,
                 register(req, req.target_ctx)
         for req, intc in events["intercepted"]:
             sched.notify_intercepted(req, intc, end)
+            tool_windows[req.rid] = [end, end + intc.duration, 0.0]
             heapq.heappush(resume_heap,
                            (end + intc.duration, req.rid, req))
         res.finished.extend(events["finished"])

@@ -206,6 +206,82 @@ def test_explicit_intercept_at_first_boundary_and_tool_roundtrip():
     assert h.request.output_tokens == 6
 
 
+def test_async_tool_runtime_does_not_stall_unrelated_sessions():
+    """DESIGN.md §12: with an AsyncToolRuntime attached, a slow tool runs
+    off-thread and unrelated sessions keep making progress while it is in
+    flight. The tool itself blocks until the OTHER session has finished —
+    with the legacy inline dispatch this would deadlock (the engine's
+    step loop would be stuck inside the tool call, so the other session
+    could never advance); off-thread it completes, the completion is
+    injected through the resume queue, and both sessions drain."""
+    import time as _time
+    cfg = get_config("llama3.2-1b", tiny=True)
+    eng = _engine(cfg, "vllm", n_pages=96)
+    cl = InferCeptClient(eng, tool_workers=2)
+    assert eng.async_tools is not None
+    other = {}
+
+    def slow_tool(call):
+        # worker thread: wait until the unrelated session finished (its
+        # state is written by the engine thread during poll)
+        deadline = _time.time() + 30.0
+        while not other["handle"].finished:
+            assert _time.time() < deadline, \
+                "unrelated session stalled behind the in-flight tool"
+            _time.sleep(0.005)
+        return [5, 6, 7]
+
+    def det(req, tid, now):
+        if req.output_tokens == 3 and req.seg_idx == 0:
+            return InterceptDirective("tool", 0.2, reason="detector")
+        return None
+
+    ha = cl.submit(list(range(20)), detector=det, max_new_tokens=10,
+                   tools=WallClockToolExecutor(slow_tool))
+    hb = cl.submit(list(range(30, 50)), max_new_tokens=12)
+    other["handle"] = hb
+    cl.poll()
+    assert ha.finished and hb.finished
+    # the unrelated session finished (in virtual time) while ha's tool was
+    # still in flight, and the tool's pause overlapped engine-busy time
+    assert hb.request.finish_time < ha.request.finish_time
+    assert eng.counters["tool_seconds"] > 0
+    assert eng.counters["overlapped_tool_seconds"] > 0
+    stream = cl.token_ids(ha)
+    assert [5, 6, 7] == stream[20 + 3:20 + 6]   # returned ids landed
+    assert ha.request.output_tokens == 10
+    cl.close()                                  # reclaim the pool threads
+
+
+def test_async_tool_failure_surfaces_on_engine_thread():
+    """A raising off-thread executor must surface on the engine thread
+    (poll raises with the executor error as cause) instead of dying
+    silently on a worker; the session stays paused for the caller to
+    resume or finish."""
+    cfg = get_config("llama3.2-1b", tiny=True)
+    eng = _engine(cfg, "vllm", n_pages=64)
+    cl = InferCeptClient(eng, tool_workers=1)
+
+    def bad_tool(call):
+        raise ValueError("tool exploded")
+
+    def det(req, tid, now):
+        if req.output_tokens == 2 and req.seg_idx == 0:
+            return InterceptDirective("tool", 0.1, reason="detector")
+        return None
+
+    h = cl.submit(list(range(16)), detector=det, max_new_tokens=8,
+                  tools=WallClockToolExecutor(bad_tool))
+    with pytest.raises(RuntimeError) as ei:
+        cl.poll()
+    assert isinstance(ei.value.__cause__, ValueError)
+    assert not h.finished                   # paused, caller still owns it
+    cl.resume(h, [1])                       # caller recovers manually
+    cl.poll()
+    assert h.finished
+    cl.close()
+
+
 def test_resume_and_rid_guardrails():
     """Lifecycle guardrails: a second resume for the same interception is
     rejected while the first is still queued; auto-allocated session rids
@@ -237,7 +313,7 @@ def test_resume_and_rid_guardrails():
 
 
 def _sampled_run(cfg, policy, *, fused=True, paged=True, seed=11,
-                 temp=0.8, top_k=6):
+                 temp=0.8, top_k=6, top_p=1.0):
     eng = _engine(cfg, policy, n_pages=96, fused=fused, paged=paged)
     cl = InferCeptClient(eng)
     tool = VirtualTimeToolExecutor(cfg.vocab_size, n_tokens=5, duration=0.3)
@@ -249,7 +325,7 @@ def _sampled_run(cfg, policy, *, fused=True, paged=True, seed=11,
 
     hs = [cl.submit(list(range(r, r + 20)),
                     SamplingParams(temperature=temp, top_k=top_k,
-                                   seed=seed + r),
+                                   top_p=top_p, seed=seed + r),
                     detector=det, max_new_tokens=14, tools=tool)
           for r in range(2)]
     cl.poll()
@@ -280,6 +356,65 @@ def test_sampling_deterministic_across_policies_and_paths():
     assert gather == base, "gather-oracle sampled stream diverged"
     other, _ = _sampled_run(cfg, "vllm", seed=999)
     assert other != base, "per-request seed had no effect"
+
+
+def test_top_p_deterministic_across_policies_and_paths():
+    """Nucleus sampling rides the same (seed, position)-keyed seam: top-p
+    streams are bit-identical across scheduling policies and across the
+    fused / unfused / gather execution paths, and a binding threshold
+    really changes the stream (vs top-k-only sampling with the same
+    seed)."""
+    cfg = get_config("llama3.2-1b", tiny=True)
+    base, _ = _sampled_run(cfg, "vllm", top_k=0, top_p=0.3)
+    for policy in ["infercept", "swap", "preserve"]:
+        streams, _ = _sampled_run(cfg, policy, top_k=0, top_p=0.3)
+        assert streams == base, f"top-p stream diverged under {policy}"
+    unfused, _ = _sampled_run(cfg, "vllm", fused=False, top_k=0, top_p=0.3)
+    assert unfused == base, "unfused top-p stream diverged"
+    gather, _ = _sampled_run(cfg, "vllm", fused=False, paged=False,
+                             top_k=0, top_p=0.3)
+    assert gather == base, "gather-oracle top-p stream diverged"
+    full, _ = _sampled_run(cfg, "vllm", top_k=0, top_p=1.0)
+    assert full != base, "top_p=0.3 did not bind (same stream as full)"
+
+
+def test_top_p_nucleus_membership_and_disabled_identity():
+    """Unit-level contract of the sample_tokens nucleus seam: every
+    sampled id lies inside the numpy-computed smallest prefix of the
+    temperature-scaled distribution reaching top_p (threshold token
+    included), and top_p=1.0 leaves the top-k-only graph's output
+    bit-identical."""
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.models import sample_tokens
+
+    rng = np.random.default_rng(0)
+    B, V, p = 8, 64, 0.3
+    logits = rng.normal(size=(B, V)).astype(np.float32) * 3.0
+    temps = np.full(B, 0.7, np.float32)
+    seeds = np.arange(B, dtype=np.int32)
+    poss = np.arange(10, 10 + B, dtype=np.int32)
+
+    def sample(top_p):
+        return np.asarray(sample_tokens(
+            jnp.asarray(logits), jnp.asarray(temps),
+            jnp.zeros(B, jnp.int32), jnp.full(B, top_p, jnp.float32),
+            jnp.asarray(seeds), jnp.asarray(poss)))
+
+    out = sample(p)
+    for b in range(B):
+        scaled = logits[b] / temps[b]
+        probs = np.exp(scaled - scaled.max())
+        probs /= probs.sum()
+        order = np.argsort(-probs)
+        cum = np.cumsum(probs[order])
+        cut = int(np.searchsorted(cum, p)) + 1   # smallest prefix >= p
+        nucleus = set(order[:cut].tolist())
+        assert int(out[b]) in nucleus, \
+            f"row {b}: sampled {out[b]} outside the top-p nucleus"
+    # disabled filter: bit-identical to the top-k-only behavior
+    assert np.array_equal(sample(1.0), sample(0.0))
+    assert np.array_equal(sample(1.0), sample(-1.0))
 
 
 def test_greedy_sampling_params_equal_legacy_argmax():
