@@ -603,6 +603,101 @@ def bench_overlap_sweep(quick=False):
         json.dump(results, f, indent=2)
 
 
+def bench_waste_trace(quick=False):
+    """Waste-attribution telemetry (DESIGN.md §13) on the real engine:
+    per policy, run the Table-1-style workload traced and untraced and
+    assert the streams and all legacy counters are bit-identical (the
+    NullTracer identity contract), collect the WasteLedger breakdown,
+    re-assert sum(causes) == total within float tolerance, check the
+    engine<->simulator ledger mirror for the token-granular policies, and
+    export + validate a Perfetto trace for infercept. Writes
+    benchmarks/waste_breakdown.json and benchmarks/trace_infercept.json
+    (the CI smoke re-validates both via repro.obs.check)."""
+    import json
+    import os
+    from repro.configs import get_config
+    from repro.core import POLICIES
+    from repro.launch.serve import scale_to_budget
+    from repro.obs.check import check_breakdown
+    from repro.obs.export import validate_trace, write_trace
+    from repro.obs.ledger import waste_report
+    from repro.obs.trace import SpanTracer
+    from repro.serving.engine import Engine
+    from repro.serving.workloads import make_workload
+    from repro.sim.simulator import simulate
+    from repro.utils.hw import TPU_V5E
+    from repro.core.costmodel import CostModel
+
+    cfg = get_config("llama3.2-1b", tiny=True)
+    n = 6 if quick else 12
+    reqs = scale_to_budget(
+        make_workload(seed=17, n_requests=n, rate_rps=2.0, max_ctx=220),
+        256, prompt_cap=48, gen_cap=12, ret_cap=8, max_segments=3)
+
+    def run(policy, tracer):
+        eng = Engine(cfg, POLICIES[policy], page_size=16, n_pages=128,
+                     max_model_len=256, seed=0, tracer=tracer)
+        for r in copy.deepcopy(reqs):
+            eng.add_request(r)
+        fin = eng.run()
+        assert fin.drained and len(fin) == len(reqs), policy
+        return eng, {r.rid: eng.generated_text(r) for r in fin}
+
+    out_dir = os.path.dirname(os.path.abspath(__file__))
+    results = {}
+    for policy in ["vllm", "preserve", "swap", "infercept"]:
+        tracer = SpanTracer()
+        t0 = time.time()
+        eng, streams = run(policy, tracer)
+        wall = time.time() - t0
+        eng_off, streams_off = run(policy, None)
+        assert streams == streams_off, \
+            f"tracing perturbed the streams under {policy}"
+        assert dict(eng.counters) == dict(eng_off.counters), \
+            f"tracing perturbed the counters under {policy}"
+
+        rep = waste_report(eng.ledger)
+        rep["virtual_time_s"] = round(eng.now, 4)
+        rep["trace_events"] = len(eng.tracer)
+        results[policy] = rep
+        assert not check_breakdown(rep), (policy, check_breakdown(rep))
+
+        if policy in ("vllm", "preserve"):
+            # token-granular policies: the simulator's ledger mirrors the
+            # engine's bit-for-bit at matched capacity (swap policies
+            # page-align their moves, the sim stays token-granular)
+            cost = CostModel(cfg=cfg, chip=TPU_V5E, n_chips=1)
+            res = simulate(copy.deepcopy(reqs), POLICIES[policy], cost,
+                           gpu_capacity_tokens=eng.sched.gpu_capacity)
+            sl = res.ledger
+            assert sl.causes == eng.ledger.causes, policy
+            assert sl.gpu_byte_seconds == eng.ledger.gpu_byte_seconds
+            assert sl.total_check == eng.ledger.total_check, policy
+            # and the sim's ledger equals its own legacy waste fields
+            assert sl.causes["preserve_pinned"] == res.waste_preserved
+            assert sl.causes["recompute"] == res.waste_recompute
+            rep["sim_mirror"] = "exact"
+
+        if policy == "infercept":
+            trace_path = os.path.join(out_dir, "trace_infercept.json")
+            n_ev = write_trace(eng.tracer, trace_path)
+            with open(trace_path) as f:
+                errs = validate_trace(json.load(f))
+            assert not errs, errs[:5]
+            rep["trace_file"] = os.path.basename(trace_path)
+            rep["trace_events"] = n_ev
+
+        _row(f"waste_trace_{policy}", wall * 1e6, {
+            "total_waste_bs": round(rep["total_waste"], 4),
+            "waste_fraction": round(rep["waste_fraction"], 6),
+            "top_cause": max(rep["causes"], key=rep["causes"].get),
+            "intercepts": rep["intercepts"]["n"],
+            "trace_events": rep["trace_events"],
+        })
+    with open(os.path.join(out_dir, "waste_breakdown.json"), "w") as f:
+        json.dump(results, f, indent=2)
+
+
 def bench_multi_gpu_scaling(quick=False):
     """13B on 1 vs 2 GPUs, 70B on 4 (paper §5.1: distributed setting gains
     grow because more HBM per GPU is left for KV)."""
@@ -631,7 +726,7 @@ ALL = [bench_table1_workload, bench_fig2_end2end, bench_fig3_breakdown,
        bench_waste_s32, bench_estimator, bench_single_augment,
        bench_kernels, bench_multi_gpu_scaling, bench_prefix_cache_sweep,
        bench_decode_sweep, bench_mixed_sweep, bench_serve_sweep,
-       bench_overlap_sweep]
+       bench_overlap_sweep, bench_waste_trace]
 
 
 def main() -> None:
@@ -651,6 +746,9 @@ def main() -> None:
     ap.add_argument("--overlap-sweep", action="store_true",
                     help="run only the pipelined-step overlap on/off sweep "
                          "(alias for --only overlap_sweep)")
+    ap.add_argument("--waste-trace", action="store_true",
+                    help="run only the waste-attribution telemetry sweep "
+                         "(alias for --only waste_trace)")
     args = ap.parse_args()
     if args.decode_sweep:
         args.only = "decode_sweep"
@@ -660,6 +758,8 @@ def main() -> None:
         args.only = "serve_sweep"
     if args.overlap_sweep:
         args.only = "overlap_sweep"
+    if args.waste_trace:
+        args.only = "waste_trace"
     print("name,us_per_call,derived")
     for fn in ALL:
         if args.only and args.only not in fn.__name__:

@@ -4,11 +4,39 @@ recomputation, and the min-waste scheduler — and compare every policy on
 the SAME workload, verifying identical outputs.
 
     PYTHONPATH=src python examples/serve_augmented.py [--requests 8]
-        [--agent] [--prefix-cache]
+        [--agent] [--prefix-cache] [--trace out.json]
 
 --agent swaps in the shared-prefix agent workload (multi-turn sessions over
 common system prompts); --prefix-cache enables the intercept-aware prefix
 KV cache (DESIGN.md §8) — token streams must stay identical either way.
+
+Reading a trace (--trace, DESIGN.md §13)
+----------------------------------------
+``--trace out.json`` records every policy comparison's last run
+(infercept) with a SpanTracer and writes Chrome/Perfetto ``trace_event``
+JSON. Drag the file onto https://ui.perfetto.dev (or chrome://tracing)
+and read it like this — all timestamps are VIRTUAL seconds (shown as µs):
+
+  * the ``engine`` process has a ``step`` track (back-to-back ``iter``
+    spans — one scheduler iteration each, args carry query/context token
+    counts — separated by ``idle`` spans when the clock jumps to the
+    next arrival or tool completion) and a ``dma`` track (``swap_dma``
+    windows hiding under the model call; ``bubble`` spans where the
+    transfer outran the model window and stalled the pipeline);
+  * the ``requests`` process has one track per request: its lifecycle
+    reads left-to-right as ``queued`` → ``prefill`` chunks → ``decode``
+    runs, then per interception a ``tool`` async span [call, resume]
+    overlaying whatever the pause did underneath — nothing (preserve),
+    ``swap_out``/``swap_in`` spans, or a ``discard`` instant followed by
+    ``prefill`` spans whose ``recompute_tokens`` arg shows Eq. 4's
+    recompute tax. The async end event's args carry the Eq. 5 branch the
+    pause resolved to and its predicted vs realized waste charge;
+  * a long gap between a ``tool`` end and the next compute span is queue
+    time (the ``queued`` span makes it explicit) — the paper's
+    fairness-vs-waste tension made visible per request.
+
+The waste summary printed for the traced run is the same WasteLedger
+breakdown the benchmarks export (`benchmarks.run --waste-trace`).
 """
 import argparse
 import copy
@@ -53,6 +81,9 @@ def main():
                     help="shared-prefix multi-turn agent workload")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="enable the prefix KV cache (DESIGN.md §8)")
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="write a Perfetto trace of the infercept run "
+                         "(see module docstring: reading a trace)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, tiny=True)
@@ -65,10 +96,18 @@ def main():
     print(f"{'policy':18s} {'virt_time':>9s} {'norm_lat':>9s} {'ttft':>7s} "
           f"{'recompute':>9s} {'cache_hit':>9s} {'swapped':>8s} "
           f"{'wall':>6s}")
+    traced = None
     for name in ["vllm", "improved_discard", "preserve", "swap",
                  "infercept"]:
+        tracer = None
+        if args.trace and name == "infercept":
+            from repro.obs.trace import SpanTracer
+            tracer = SpanTracer()
         eng = Engine(cfg, POLICIES[name], page_size=16, n_pages=128,
-                     max_model_len=256, prefix_cache=args.prefix_cache)
+                     max_model_len=256, prefix_cache=args.prefix_cache,
+                     tracer=tracer)
+        if tracer is not None:
+            traced = eng
         for r in copy.deepcopy(reqs):
             eng.add_request(r)
         t0 = time.time()
@@ -92,6 +131,14 @@ def main():
         repr(sorted(base.items())).encode()).hexdigest()[:12]
     print(f"stream digest: {digest}")
     assert ok
+
+    if traced is not None:
+        from repro.obs.export import format_summary, write_trace
+        n = write_trace(traced.tracer, args.trace)
+        print(f"\nwrote {n} trace events to {args.trace} "
+              f"(open at https://ui.perfetto.dev — see the module "
+              f"docstring for how to read it)")
+        print(format_summary(traced))
 
 
 if __name__ == "__main__":

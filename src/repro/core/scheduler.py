@@ -18,6 +18,7 @@ from repro.core.estimator import DurationEstimator
 from repro.core.policy import SHORT_RUNNING_KINDS, PolicyConfig
 from repro.core.request import Interception, Phase, Request
 from repro.core.waste import min_waste_decision
+from repro.obs.metrics import MetricsRegistry
 
 
 @dataclasses.dataclass
@@ -43,30 +44,62 @@ class IterationPlan:
                 and not self.swap_in)
 
 
-@dataclasses.dataclass
 class SchedulerStats:
-    recompute_tokens: int = 0
-    fresh_tokens: int = 0
-    decode_tokens: int = 0
-    swapped_out_tokens: int = 0
-    swapped_in_tokens: int = 0
-    discards: int = 0
-    preserves: int = 0
-    swaps: int = 0
-    evictions: int = 0
-    # tokens restored from the prefix cache instead of being recomputed
-    # (credited via notify_cache_hit; they reduce recompute debt)
-    cache_hit_tokens: int = 0
-    # planned swap-ins the engine could not back with physical pages; the
-    # request was re-preempted to recompute instead of crashing the engine
-    swap_in_failures: int = 0
+    """Scheduler counters, stored in a MetricsRegistry under a ``sched_``
+    prefix. Attribute reads/writes route straight to the registry cells
+    (same int objects, no copies), so legacy ``sched.stats.discards += 1``
+    call sites and tests keep their exact semantics while the counters
+    show up in the shared telemetry dump.
+
+    Fields:
+      recompute_tokens / fresh_tokens / decode_tokens — query-token mix
+      swapped_out_tokens / swapped_in_tokens — swap traffic
+      discards / preserves / swaps / evictions — pause decisions
+      cache_hit_tokens — tokens restored from the prefix cache instead of
+        being recomputed (credited via notify_cache_hit; they reduce
+        recompute debt)
+      swap_in_failures — planned swap-ins the engine could not back with
+        physical pages; the request was re-preempted to recompute
+        instead of crashing the engine
+    """
+
+    _FIELDS = ("recompute_tokens", "fresh_tokens", "decode_tokens",
+               "swapped_out_tokens", "swapped_in_tokens", "discards",
+               "preserves", "swaps", "evictions", "cache_hit_tokens",
+               "swap_in_failures")
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None,
+                 prefix: str = "sched_"):
+        object.__setattr__(self, "_reg",
+                           registry if registry is not None
+                           else MetricsRegistry())
+        object.__setattr__(self, "_prefix", prefix)
+        for f in self._FIELDS:
+            self._reg.counters.setdefault(prefix + f, 0)
+
+    def __getattr__(self, name):
+        if name in SchedulerStats._FIELDS:
+            return self._reg.counters[self._prefix + name]
+        raise AttributeError(
+            f"{type(self).__name__!s} has no attribute {name!r}")
+
+    def __setattr__(self, name, value):
+        if name in SchedulerStats._FIELDS:
+            self._reg.counters[self._prefix + name] = value
+        else:
+            object.__setattr__(self, name, value)
+
+    def __repr__(self):
+        body = ", ".join(f"{f}={getattr(self, f)}" for f in self._FIELDS)
+        return f"SchedulerStats({body})"
 
 
 class Scheduler:
     def __init__(self, policy: PolicyConfig, cost: CostModel, *,
                  estimator: Optional[DurationEstimator] = None,
                  gpu_capacity_tokens: Optional[int] = None,
-                 cpu_capacity_tokens: Optional[int] = None):
+                 cpu_capacity_tokens: Optional[int] = None,
+                 registry: Optional[MetricsRegistry] = None):
         self.policy = policy
         self.cost = cost
         self.estimator = estimator or DurationEstimator(mode=policy.estimator)
@@ -83,7 +116,8 @@ class Scheduler:
         self.waiting: List[Request] = []
         self.swap_out_order: List[Request] = []   # waste-priority order
         self.live: Dict[int, Request] = {}
-        self.stats = SchedulerStats()
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.stats = SchedulerStats(self.registry)
         self._recompute_debt: Dict[int, int] = {}
         # rid -> device tokens that are PURE cache credit (no real compute
         # invested since the last match); only these may be reclaimed when

@@ -25,6 +25,8 @@ import time
 from repro.configs import get_config
 from repro.core import POLICIES
 from repro.core.request import InterceptDirective, Segment
+from repro.obs.export import format_stats_line, format_summary, write_trace
+from repro.obs.trace import SpanTracer
 from repro.serving.api_executor import (AsyncToolRuntime,
                                         WallClockToolExecutor)
 from repro.serving.engine import Engine
@@ -82,6 +84,13 @@ def main():
     ap.add_argument("--tool-workers", type=int, default=2,
                     help="thread-pool size for off-thread tool execution "
                          "(0 = inline, the live tool blocks the loop)")
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="record per-request spans and write a "
+                         "Chrome/Perfetto trace_event JSON (open at "
+                         "https://ui.perfetto.dev)")
+    ap.add_argument("--stats-every", type=int, default=0, metavar="N",
+                    help="print a one-line stats update every N engine "
+                         "steps while serving (0 = off)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, tiny=args.tiny)
@@ -91,7 +100,8 @@ def main():
 
     eng = Engine(cfg, POLICIES[args.policy], page_size=args.page_size,
                  n_pages=args.pages, max_model_len=args.max_len,
-                 overlap=not args.no_overlap)
+                 overlap=not args.no_overlap,
+                 tracer=SpanTracer() if args.trace else None)
     if args.tool_workers > 0:
         eng.async_tools = AsyncToolRuntime(max_workers=args.tool_workers)
     scripted = ScriptedClient(eng, retain_events=True)
@@ -117,7 +127,18 @@ def main():
         tools=WallClockToolExecutor(calculator))
 
     t0 = time.time()
-    events = client.poll()
+    if args.stats_every > 0:
+        # bounded poll slices with a periodic one-line stats update; the
+        # batch's drained flag says when the engine actually finished
+        events = []
+        while True:
+            batch = client.poll(args.stats_every)
+            events.extend(batch)
+            print(format_stats_line(eng))
+            if batch.drained:
+                break
+    else:
+        events = client.poll()
     wall = time.time() - t0
     finished = [h for h in handles + [live] if h.finished]
     intercepts = sum(isinstance(e, InterceptEvent) for e in events)
@@ -128,12 +149,7 @@ def main():
     print(f"decode_tokens={st.decode_tokens} recompute={st.recompute_tokens} "
           f"fresh={st.fresh_tokens} swapped_out={st.swapped_out_tokens} "
           f"preserves={st.preserves} discards={st.discards}")
-    c = eng.counters
-    print(f"overlap={not args.no_overlap} "
-          f"swap_hidden_bytes={int(c['swap_overlap_bytes'])} "
-          f"pipeline_bubbles={int(c['pipeline_bubbles'])} "
-          f"tool_s={c['tool_seconds']:.3f} "
-          f"overlapped_tool_s={c['overlapped_tool_seconds']:.3f}")
+    print(format_summary(eng))
     print(f"live session: state={live.state} "
           f"stream_len={len(client.token_ids(live))} "
           f"out={live.request.output_tokens}tok "
@@ -143,6 +159,10 @@ def main():
         print(f"  rid={h.rid} out={m['output_tokens']}tok "
               f"norm_lat={m['normalized'] * 1e3:.2f}ms/tok "
               f"ttft={m['ttft']:.3f}s")
+    if args.trace:
+        n = write_trace(eng.tracer, args.trace)
+        print(f"wrote {n} trace events to {args.trace} "
+              f"(open at https://ui.perfetto.dev)")
     eng.close()
 
 

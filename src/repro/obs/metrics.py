@@ -1,0 +1,178 @@
+"""The metrics registry: counters, gauges, fixed-bucket histograms.
+
+One registry instance spans the whole serving stack (engine, scheduler,
+ledger, session client). The pre-existing surfaces stay intact as thin
+views over it:
+
+  * ``Engine.counters`` is a ``CounterView`` (a MutableMapping whose
+    items live in ``registry.counters`` under an ``engine_`` prefix), so
+    ``eng.counters["decode_bytes"] += n`` keeps its exact int arithmetic
+    and dict semantics — nothing is copied, nothing is rounded.
+  * ``SchedulerStats`` (core/scheduler.py) routes its attributes to
+    ``sched_``-prefixed registry counters the same way.
+
+Histograms use FIXED bucket edges declared up front (Prometheus-style
+cumulative ``le`` semantics) so merging/diffing dumps across runs is
+well-defined; all time-valued observations share ``DEFAULT_TIME_EDGES``
+(virtual seconds, log-spaced sub-ms .. minutes).
+"""
+from __future__ import annotations
+
+import bisect
+from collections.abc import MutableMapping
+from typing import Dict, Iterable, Optional, Tuple
+
+# virtual-second buckets: sub-millisecond decode iterations up to
+# minute-long tool pauses / queue waits
+DEFAULT_TIME_EDGES: Tuple[float, ...] = (
+    0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5,
+    1.0, 2.5, 5.0, 10.0, 30.0, 60.0)
+
+
+class Histogram:
+    """Fixed-bucket histogram. ``counts[i]`` holds observations with
+    ``v <= edges[i]`` (first matching bucket, non-cumulative storage;
+    the Prometheus dump re-cumulates); ``counts[-1]`` is the overflow."""
+
+    __slots__ = ("name", "edges", "counts", "total", "n")
+
+    def __init__(self, name: str,
+                 edges: Iterable[float] = DEFAULT_TIME_EDGES):
+        self.name = name
+        self.edges = tuple(float(e) for e in edges)
+        assert list(self.edges) == sorted(self.edges), \
+            "histogram bucket edges must be sorted"
+        self.counts = [0] * (len(self.edges) + 1)
+        self.total = 0.0
+        self.n = 0
+
+    def observe(self, value: float):
+        self.counts[bisect.bisect_left(self.edges, value)] += 1
+        self.total += value
+        self.n += 1
+
+    def mean(self) -> float:
+        return self.total / self.n if self.n else 0.0
+
+    def __repr__(self):
+        return (f"Histogram({self.name}, n={self.n}, "
+                f"mean={self.mean():.6g})")
+
+
+class MetricsRegistry:
+    """Counters (monotonic-ish numeric cells), gauges (last-write-wins),
+    and histograms, each keyed by a flat string name."""
+
+    def __init__(self):
+        self.counters: Dict[str, float] = {}
+        self.gauges: Dict[str, float] = {}
+        self.histograms: Dict[str, Histogram] = {}
+
+    # -- counters --------------------------------------------------------
+    def counter(self, name: str, initial=0):
+        """Declare a counter (idempotent); returns its current value."""
+        return self.counters.setdefault(name, initial)
+
+    def inc(self, name: str, delta=1):
+        self.counters[name] = self.counters.get(name, 0) + delta
+
+    def get(self, name: str, default=0):
+        return self.counters.get(name, default)
+
+    def view(self, prefix: str = "") -> "CounterView":
+        return CounterView(self, prefix)
+
+    # -- gauges ----------------------------------------------------------
+    def gauge(self, name: str, value: float):
+        self.gauges[name] = value
+
+    # -- histograms ------------------------------------------------------
+    def histogram(self, name: str,
+                  edges: Iterable[float] = DEFAULT_TIME_EDGES) -> Histogram:
+        h = self.histograms.get(name)
+        if h is None:
+            h = self.histograms[name] = Histogram(name, edges)
+        return h
+
+    def observe(self, name: str, value: float):
+        self.histogram(name).observe(value)
+
+    # -- export ----------------------------------------------------------
+    def snapshot(self) -> dict:
+        return {
+            "counters": dict(self.counters),
+            "gauges": dict(self.gauges),
+            "histograms": {
+                n: {"edges": list(h.edges), "counts": list(h.counts),
+                    "sum": h.total, "count": h.n}
+                for n, h in self.histograms.items()},
+        }
+
+    def to_prometheus(self) -> str:
+        """Prometheus text exposition format (one flat dump; virtual-time
+        quantities are plain seconds)."""
+        lines = []
+        for name in sorted(self.counters):
+            lines.append(f"# TYPE {_prom_name(name)} counter")
+            lines.append(f"{_prom_name(name)} {_prom_val(self.counters[name])}")
+        for name in sorted(self.gauges):
+            lines.append(f"# TYPE {_prom_name(name)} gauge")
+            lines.append(f"{_prom_name(name)} {_prom_val(self.gauges[name])}")
+        for name in sorted(self.histograms):
+            h = self.histograms[name]
+            pn = _prom_name(name)
+            lines.append(f"# TYPE {pn} histogram")
+            cum = 0
+            for edge, c in zip(h.edges, h.counts):
+                cum += c
+                lines.append(f'{pn}_bucket{{le="{edge:g}"}} {cum}')
+            lines.append(f'{pn}_bucket{{le="+Inf"}} {h.n}')
+            lines.append(f"{pn}_sum {_prom_val(h.total)}")
+            lines.append(f"{pn}_count {h.n}")
+        return "\n".join(lines) + "\n"
+
+
+def _prom_name(name: str) -> str:
+    return "".join(c if c.isalnum() or c == "_" else "_" for c in name)
+
+
+def _prom_val(v) -> str:
+    return repr(int(v)) if isinstance(v, bool) else repr(v)
+
+
+class CounterView(MutableMapping):
+    """Dict-compatible view over a registry's counters under a fixed key
+    prefix. ``view[k]`` is exactly ``registry.counters[prefix + k]`` —
+    same Python number objects, so ``view["x"] += 1`` preserves int
+    arithmetic bit-for-bit and legacy code/tests that treat
+    ``engine.counters`` as a plain dict keep working unchanged."""
+
+    __slots__ = ("_reg", "_prefix")
+
+    def __init__(self, registry: MetricsRegistry, prefix: str = ""):
+        self._reg = registry
+        self._prefix = prefix
+
+    @property
+    def registry(self) -> MetricsRegistry:
+        return self._reg
+
+    def __getitem__(self, key):
+        return self._reg.counters[self._prefix + key]
+
+    def __setitem__(self, key, value):
+        self._reg.counters[self._prefix + key] = value
+
+    def __delitem__(self, key):
+        del self._reg.counters[self._prefix + key]
+
+    def __iter__(self):
+        p = self._prefix
+        return (k[len(p):] for k in list(self._reg.counters)
+                if k.startswith(p))
+
+    def __len__(self):
+        return sum(1 for _ in self)
+
+    def __repr__(self):
+        return f"CounterView({self._prefix!r}, {dict(self)!r})"

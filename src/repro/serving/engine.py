@@ -113,6 +113,9 @@ from repro.core.scheduler import Scheduler
 from repro.kernels.swap_pack import SwapStager
 from repro.memory.block_manager import BlockManager
 from repro.models import LM, sample_tokens
+from repro.obs.ledger import WasteLedger
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NullTracer, SpanTracer
 from repro.serving.api_executor import (AsyncToolRuntime,
                                         ScriptedToolRuntime,
                                         prompt_token_ids)
@@ -173,6 +176,7 @@ class Engine:
                  paged: bool = True,
                  fused: bool = True,
                  overlap: bool = True,
+                 tracer: Optional[SpanTracer] = None,
                  dtype=jnp.float32):
         for blk in cfg.blocks:
             assert blk.kind in ("attn", "shared_attn"), \
@@ -188,8 +192,17 @@ class Engine:
         self.scratch_page = self.blocks.allocate(1)[0]  # dummy-slot target
         self.cost = CostModel(cfg=cfg, chip=TPU_V5E, n_chips=1)
         cap = max(page_size, (n_pages - 8) * page_size)
+        # telemetry (DESIGN.md §13): one registry spans engine + scheduler
+        # + ledger; the tracer defaults to the allocation-free NullTracer
+        # and every emission site below is guarded on tracer.enabled so
+        # tracing cannot perturb the virtual clock or the streams
+        self.metrics = MetricsRegistry()
+        self.tracer: SpanTracer = tracer if tracer is not None \
+            else NullTracer()
+        self.ledger = WasteLedger(self.cost, cap, registry=self.metrics)
         self.sched = Scheduler(policy, self.cost, estimator=estimator,
-                               gpu_capacity_tokens=cap)
+                               gpu_capacity_tokens=cap,
+                               registry=self.metrics)
         self.sched.on_discard = self._on_discard
         self.cache: Optional[PrefixCache] = None
         self._match_seen: Dict[int, int] = {}   # rid -> gen of a known miss
@@ -263,7 +276,12 @@ class Engine:
         # whose transfer exceeded the window and the remainder charged;
         # tool_seconds / overlapped_tool_seconds — total virtual tool
         # pause vs the part that overlapped engine-busy time.
-        self.counters: Dict[str, float] = {
+        # Stored as a CounterView over the registry ("engine_" prefix):
+        # every read/write lands on the same registry cells the telemetry
+        # dump exports, while `engine.counters[...]` keeps exact dict/int
+        # semantics for legacy call sites and tests.
+        self.counters = self.metrics.view("engine_")
+        self.counters.update({
             "decode_bytes": 0, "decode_tokens": 0,
             "prefill_bytes": 0, "prefill_tokens": 0,
             "swap_bytes": 0, "cow_bytes": 0,
@@ -271,7 +289,11 @@ class Engine:
             "logit_bytes": 0,
             "swap_overlap_bytes": 0, "pipeline_bubbles": 0,
             "pipeline_bubble_s": 0.0,
-            "tool_seconds": 0.0, "overlapped_tool_seconds": 0.0}
+            "tool_seconds": 0.0, "overlapped_tool_seconds": 0.0})
+        # rid -> (t_start, phase) while a request sits in a wait state
+        # (queued after admission / swapped_wait after a swap-out resume);
+        # closed into a span + wait histogram at its next compute
+        self._wait_marks: Dict[int, Tuple[float, str]] = {}
         # bytes one token position occupies across every layer's pool
         self.kv_token_bytes = int(sum(
             leaf.dtype.itemsize * leaf.shape[0]
@@ -349,6 +371,7 @@ class Engine:
                     req.rid, req.prompt_len, self.cfg.vocab_size)))
             self.kv[req.rid] = ReqKV(tokens=toks, pages=[])
             self.sched.submit(req)
+            self._wait_marks[req.rid] = (req.arrival, "queued")
 
     # ------------------------------------------------------------------
     # session lifecycle: out-of-band resume, events, sampling
@@ -453,7 +476,9 @@ class Engine:
         intc = Interception(kind=act.kind, duration=act.duration_hint,
                             returned_tokens=act.returned_tokens or 0)
         req.close_segment(intc)
+        c_before, gpu_before = req.device_tokens, self.sched.gpu_used()
         self.sched.notify_intercepted(req, intc, end)
+        self._note_intercept(req, intc, end, c_before, gpu_before)
         if act.returned_tokens is not None:
             # scripted stub owns the resume: the due time is known now
             self._tool_windows[req.rid] = [end, end + intc.duration, 0.0]
@@ -467,6 +492,74 @@ class Engine:
             trigger_token_id=tid, duration_hint=act.duration_hint,
             caller_owned=act.returned_tokens is None, time=end))
         return True
+
+    # ------------------------------------------------------------------
+    # telemetry hooks (DESIGN.md §13)
+    # ------------------------------------------------------------------
+    def _note_intercept(self, req: Request, intc: Interception, t: float,
+                        c_before: int, gpu_before: int):
+        """Open the intercept's ledger record. ``c_before``/``gpu_before``
+        are the context sizes captured BEFORE notify_intercepted (discard
+        zeroes device_tokens immediately); the estimator call is pure, so
+        recording its prediction cannot perturb the stream."""
+        pred = self.sched.estimator.estimate(req, t)
+        self.ledger.intercept_started(req.rid, intc.kind, t, pred,
+                                      c_before, gpu_before)
+        if self.tracer.enabled:
+            self.tracer.async_begin(
+                "tool", req.rid, intc.kind, t,
+                {"kind": intc.kind, "predicted_s": pred,
+                 "c_tokens": c_before,
+                 "decision": req.decision or "pending"})
+
+    def _close_wait_mark(self, req: Request, t1: float):
+        """Close an open queued/swapped_wait window: observe it into the
+        wait histograms and emit its span ending at ``t1`` (the start of
+        the iteration that finally computes for the request), so wait
+        spans never overlap the compute spans that follow them."""
+        mark = self._wait_marks.pop(req.rid, None)
+        if mark is None:
+            return
+        t0, kind = mark
+        self.metrics.observe(
+            "engine_queue_wait_s" if kind == "queued"
+            else "engine_swapped_wait_s", max(0.0, t1 - t0))
+        if self.tracer.enabled and t1 > t0:
+            self.tracer.span(("req", req.rid), kind, t0, t1)
+
+    def _trace_iteration(self, plan, start: float, end: float,
+                         t_model: float, stall: float):
+        """Emit this iteration's spans (tracer-enabled runs only). Called
+        before apply_plan so per-chunk recompute shares read the same
+        pre-commit debt the ledger charged."""
+        tr = self.tracer
+        tr.span(("engine", "step"), "iter", start, end,
+                {"query_tokens": plan.query_tokens,
+                 "context_tokens": plan.context_tokens,
+                 "decode": len(plan.decode), "chunks": len(plan.chunks),
+                 "stall_s": stall})
+        swap_tokens = sum(n for _, n in plan.swap_out) \
+            + sum(n for _, n in plan.swap_in)
+        if swap_tokens:
+            t_dma = min(t_model, self.cost.t_swap(swap_tokens))
+            tr.span(("engine", "dma"), "swap_dma", start, start + t_dma,
+                    {"tokens": swap_tokens})
+        if stall > 0.0:
+            tr.span(("engine", "dma"),
+                    "bubble" if self.overlap else "stall",
+                    start + t_model, end)
+        for req, n in plan.chunks:
+            rec = min(n, self.sched._recompute_debt.get(req.rid, 0))
+            tr.span(("req", req.rid), "prefill", start, end,
+                    {"tokens": n, "recompute_tokens": rec})
+        for req in plan.decode:
+            tr.span(("req", req.rid), "decode", start, end)
+        for req, n in plan.swap_out:
+            tr.span(("req", req.rid), "swap_out", start, end,
+                    {"tokens": n})
+        for req, n in plan.swap_in:
+            tr.span(("req", req.rid), "swap_in", start, end,
+                    {"tokens": n})
 
     def _sample_row(self, req: Request, flat_row: np.ndarray,
                     position: int) -> int:
@@ -671,6 +764,9 @@ class Engine:
     # plan execution
     # ------------------------------------------------------------------
     def _on_discard(self, req: Request, n_tokens: int):
+        if self.tracer.enabled:
+            self.tracer.instant(("req", req.rid), "discard", self.now,
+                                {"tokens_dropped": n_tokens})
         st = self.kv.get(req.rid)
         if st is None:
             return
@@ -809,6 +905,13 @@ class Engine:
         requeues FCFS — instead of the old hard
         ``RuntimeError("out of KV pages during swap-in")`` mid-commit."""
         st = self.kv[req.rid]
+        # close any open wait span and restart the clock as queue time:
+        # the request goes back to FCFS with its context as recompute debt
+        self._close_wait_mark(req, self.now)
+        self._wait_marks[req.rid] = (self.now, "queued")
+        if self.tracer.enabled:
+            self.tracer.instant(("req", req.rid), "swap_in_failed",
+                                self.now)
         self.sched.notify_swap_in_failed(req, self.now)
         # notify's on_discard hook freed the device-resident pages and
         # dropped the host-prefix retention (host_tokens was zeroed
@@ -1066,9 +1169,31 @@ class Engine:
             win = self._tool_windows.pop(req.rid, None)
             if win is not None:
                 self.counters["overlapped_tool_seconds"] += win[2]
+            # close the intercept's ledger record at the branch the pause
+            # actually resolved to (min-waste may have flipped it mid-
+            # pause) — the same call site the simulator mirrors
+            rec = self.ledger.intercept_finished(
+                req.rid, req.decision or "none", t_done)
+            if self.tracer.enabled and rec is not None:
+                self.tracer.async_end(
+                    "tool", req.rid, rec.kind, t_done,
+                    {"branch": rec.branch,
+                     "predicted_s": rec.predicted_s,
+                     "realized_s": rec.realized_s,
+                     "predicted_waste": rec.predicted_waste,
+                     "realized_waste": rec.realized_waste})
+                self.tracer.instant(("req", req.rid), "resume", t_done)
             self.kv[req.rid].tokens.extend(
                 int(t) % self.cfg.vocab_size for t in toks)
             self.sched.notify_resumed(req, self.now, n_returned=len(toks))
+            if req.phase != Phase.RUNNING:
+                # returned tokens need compute (or a swap-in) before the
+                # request decodes again: wait-state clock restarts at the
+                # boundary (self.now >= t_done; the due time itself can
+                # fall inside an already-committed iteration's spans)
+                self._wait_marks[req.rid] = (
+                    self.now,
+                    "swapped_wait" if req.host_tokens > 0 else "queued")
         if self.cache is not None:
             # single match point: covers fresh admissions, discarded
             # contexts re-entering after an interception, and eviction
@@ -1084,16 +1209,28 @@ class Engine:
         """Nothing schedulable: jump the virtual clock to the next known
         event, or block on an off-thread tool when that is the only thing
         the engine is waiting for."""
-        nxts = []
-        if self._pending_arrivals:
-            nxts.append(self._pending_arrivals[-1].arrival)
+        INF = float("inf")
+        t_arr = self._pending_arrivals[-1].arrival \
+            if self._pending_arrivals else INF
         t = self.api.next_completion_time()
-        if t is not None:
-            nxts.append(t)
-        if self._resume_queue:
-            nxts.append(self._resume_queue[0][0])
-        if nxts:
-            self.now = max(self.now, min(nxts))
+        t_api = t if t is not None else INF
+        t_res = self._resume_queue[0][0] if self._resume_queue else INF
+        nxt = min(t_arr, t_api, t_res)
+        if nxt != INF:
+            target = max(self.now, nxt)
+            gap = target - self.now
+            if gap > 0.0:
+                # idle attribution: a jump whose target is a pending tool
+                # completion (not an arrival) is pause time that
+                # overlapped NO serving work — pinned context there is
+                # pure tool_unoverlapped waste
+                self.ledger.charge_idle(gap, self.sched.gpu_used(),
+                                        min(t_api, t_res) <= t_arr)
+                if self.tracer.enabled:
+                    self.tracer.span(
+                        ("engine", "step"), "idle", self.now, target,
+                        {"pinned_tokens": self.sched.gpu_used()})
+            self.now = target
             return True
         if self.async_tools is not None and self.async_tools.inflight:
             # every remaining session is gated on an off-thread tool:
@@ -1183,6 +1320,23 @@ class Engine:
         # every in-flight pause window [t_call, due]
         for win in self._tool_windows.values():
             win[2] += max(0.0, min(end, win[1]) - max(start, win[0]))
+        # waste attribution (§13): charge the iteration with the
+        # pre-commit scheduler state — recompute debt, paused context and
+        # batch occupancy exactly as the simulator observes them
+        rec_tokens = sum(min(n, self.sched._recompute_debt.get(r.rid, 0))
+                         for r, n in plan.chunks)
+        self.ledger.charge_iteration(
+            iter_time, stall, self.overlap, rec_tokens,
+            plan.query_tokens, self.sched.paused_device_tokens(),
+            self.sched.gpu_used())
+        if self.tracer.enabled:
+            self._trace_iteration(plan, start, end, t_model, stall)
+        for req, _ in plan.chunks:
+            self._close_wait_mark(req, start)
+        for req, _ in plan.swap_in:
+            self._close_wait_mark(req, start)
+        for req in plan.decode:
+            self._close_wait_mark(req, start)
         decode_reqs = list(plan.decode)
         events = self.sched.apply_plan(plan, end)
         # the iteration's virtual time is spent: advance the clock BEFORE
@@ -1214,7 +1368,9 @@ class Engine:
             st.tokens.append(tid)
             self._emit_token(req, tid, len(st.tokens) - 1, end)
         for req, intc in events["intercepted"]:
+            c_before, gpu_before = req.device_tokens, self.sched.gpu_used()
             self.sched.notify_intercepted(req, intc, end)
+            self._note_intercept(req, intc, end, c_before, gpu_before)
             self._tool_windows[req.rid] = [end, end + intc.duration, 0.0]
             self.api.launch(req, intc, end)
             self._emit(InterceptEvent(
@@ -1223,6 +1379,10 @@ class Engine:
                 caller_owned=False, time=end))
         for req in events["finished"]:
             self.finished.append(req)
+            self._wait_marks.pop(req.rid, None)
+            if self.tracer.enabled:
+                self.tracer.instant(("req", req.rid), "finish", end,
+                                    {"output_tokens": req.output_tokens})
             st = self.kv[req.rid]
             self._register_in_cache(st)   # prompt+gen prefix reusable by
             self.blocks.free([e[1] for e in st.pages   # follow-up turns

@@ -174,6 +174,9 @@ class SessionHandle:
     # False = state/tool dispatch only, no per-handle event retention
     # (batch replay paths that never read handle.events)
     buffer_events: bool = True
+    # virtual time of the last TokenEvent — feeds the session-level
+    # TTFT / inter-token-gap histograms in the engine's registry
+    _last_token_t: Optional[float] = None
 
     def next_event(self) -> Optional[Event]:
         return self.events.popleft() if self.events else None
@@ -276,6 +279,17 @@ class InferCeptClient:
             h.events.append(ev)
         if isinstance(ev, TokenEvent):
             h.state = "active"
+            # session latency metrics (DESIGN.md §13), on the virtual
+            # clock: first token = TTFT from submission arrival, then
+            # inter-token gaps (pauses included — the user-visible gap)
+            reg = self.engine.metrics
+            if h._last_token_t is None:
+                reg.observe("session_ttft_s",
+                            max(0.0, ev.time - h.request.arrival))
+            else:
+                reg.observe("session_token_gap_s",
+                            max(0.0, ev.time - h._last_token_t))
+            h._last_token_t = ev.time
         elif isinstance(ev, FinishEvent):
             h.state = "finished"
         elif isinstance(ev, InterceptEvent):

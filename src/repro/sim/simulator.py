@@ -30,6 +30,7 @@ from repro.core.estimator import DurationEstimator
 from repro.core.policy import PolicyConfig
 from repro.core.request import Request
 from repro.core.scheduler import Scheduler
+from repro.obs.ledger import WasteLedger
 
 
 @dataclasses.dataclass
@@ -56,6 +57,12 @@ class SimResult:
     pipeline_bubble_s: float = 0.0
     tool_seconds: float = 0.0
     overlapped_tool_seconds: float = 0.0
+    # the cause-attributed WasteLedger (DESIGN.md §13), charged with the
+    # exact expressions behind waste_preserved/waste_recompute/
+    # waste_swap_stall above — ledger.causes mirrors those fields
+    # bit-for-bit, plus idle tool_unoverlapped time and per-intercept
+    # Eq. 5 branch records the legacy fields never carried
+    ledger: Optional[object] = None
 
     # ---- headline metrics -------------------------------------------------
     def normalized_latency(self, pct: float = 50.0) -> float:
@@ -109,17 +116,25 @@ def simulate(requests: Sequence[Request], policy: PolicyConfig,
              max_iters: int = 2_000_000, prefix_cache: bool = False,
              cache_page_size: int = 16,
              cache_max_pages: Optional[int] = None,
-             overlap: bool = False) -> SimResult:
+             overlap: bool = False,
+             gpu_capacity_tokens: Optional[int] = None,
+             registry=None) -> SimResult:
     if estimator is None:
         estimator = DurationEstimator(mode=policy.estimator,
                                       profiles=profiles)
-    sched = Scheduler(policy, cost, estimator=estimator)
+    # gpu_capacity_tokens mirrors the engine's page-pool-derived capacity
+    # so engine<->sim ledger comparisons run at identical occupancy
+    sched = Scheduler(policy, cost, estimator=estimator,
+                      gpu_capacity_tokens=gpu_capacity_tokens,
+                      registry=registry)
+    ledger = WasteLedger(cost, sched.gpu_capacity,
+                         registry=sched.registry)
     arrivals = deque(sorted(requests, key=lambda r: r.arrival))
     resume_heap: list = []       # (resume_time, rid, request)
     now = 0.0
     iters = 0
     res = SimResult(policy=policy.name, finished=[], sim_time=0.0,
-                    iterations=0, overlap=overlap)
+                    iterations=0, overlap=overlap, ledger=ledger)
     m = cost.m_bytes
     # tool-overlap integral, mirroring the engine (DESIGN.md §12): per
     # in-flight interception [t_call, due, accum]; each iteration adds its
@@ -205,6 +220,7 @@ def simulate(requests: Sequence[Request], policy: PolicyConfig,
             win = tool_windows.pop(req.rid, None)
             if win is not None:
                 res.overlapped_tool_seconds += win[2]
+            ledger.intercept_finished(req.rid, req.decision or "none", t)
             sched.notify_resumed(req, now)
         if cache is not None:
             for req in list(sched.waiting):
@@ -212,15 +228,20 @@ def simulate(requests: Sequence[Request], policy: PolicyConfig,
 
         plan = sched.next_iteration(now)
         if plan.empty:
-            # idle: jump to the next event
-            nxt = []
-            if arrivals:
-                nxt.append(arrivals[0].arrival)
-            if resume_heap:
-                nxt.append(resume_heap[0][0])
-            if not nxt:
+            # idle: jump to the next event (engine _advance_idle mirror)
+            INF = float("inf")
+            t_arr = arrivals[0].arrival if arrivals else INF
+            t_res = resume_heap[0][0] if resume_heap else INF
+            if t_arr == INF and t_res == INF:
                 break
-            now = max(now, min(nxt))
+            target = max(now, min(t_arr, t_res))
+            gap = target - now
+            if gap > 0.0:
+                # a jump to a pending tool completion is pause time that
+                # overlapped no serving work — pinned context there is
+                # pure tool_unoverlapped waste
+                ledger.charge_idle(gap, sched.gpu_used(), t_res <= t_arr)
+            now = target
             continue
 
         iters += 1
@@ -262,6 +283,14 @@ def simulate(requests: Sequence[Request], policy: PolicyConfig,
         res.stall_time += stall
         if stall:
             res.waste_swap_stall += stall * sched.gpu_used() * m
+        # the cause-attributed ledger runs the SAME expressions on the
+        # same pre-commit state, so its causes equal the legacy fields
+        # above bit-for-bit (and the engine's ledger, token-granularity
+        # permitting)
+        ledger.charge_iteration(iter_time, stall, overlap, rec_tokens,
+                                plan.query_tokens,
+                                sched.paused_device_tokens(),
+                                sched.gpu_used())
 
         events = sched.apply_plan(plan, end)
         if cache is not None:
@@ -273,7 +302,11 @@ def simulate(requests: Sequence[Request], policy: PolicyConfig,
             for req in events["finished"]:
                 register(req, req.target_ctx)
         for req, intc in events["intercepted"]:
+            c_before, gpu_before = req.device_tokens, sched.gpu_used()
             sched.notify_intercepted(req, intc, end)
+            ledger.intercept_started(
+                req.rid, intc.kind, end,
+                sched.estimator.estimate(req, end), c_before, gpu_before)
             tool_windows[req.rid] = [end, end + intc.duration, 0.0]
             heapq.heappush(resume_heap,
                            (end + intc.duration, req.rid, req))
