@@ -698,6 +698,111 @@ def bench_waste_trace(quick=False):
         json.dump(results, f, indent=2)
 
 
+def bench_predictive_sweep(quick=False):
+    """Predictive intercept scheduling + speculative resume (DESIGN.md
+    §14) on a saturated agent workload: the learned per-kind EMA
+    estimator vs the paper's dynamic rule vs the oracle (gap_closed is
+    the fraction of the dynamic->oracle normalized-latency gap the
+    learned mode recovers; the PR's acceptance bar is >= 0.5), plus
+    speculative-resume accept rates and grafted-token counts under a
+    perfect and a templated predictor. Writes
+    benchmarks/predictive_sweep.json next to this file."""
+    import json
+    import os
+    from repro.core import POLICIES, DurationEstimator
+    from repro.serving.api_executor import (OracleToolResultPredictor,
+                                            TemplateToolResultPredictor)
+    from repro.serving.workloads import make_agent_workload
+    from repro.sim import simulate
+    cost = _cost()
+    vocab = 50_000
+    cap = 30_000
+    # saturated point: Poisson bursts of multi-turn sessions against a
+    # pinched KV pool, where Eq. 5 evict-vs-preserve decisions (and thus
+    # the duration estimate feeding them) control the latency
+    reqs = make_agent_workload(
+        seed=7, n_sessions=100, rate_rps=6.0, vocab=vocab, n_templates=6,
+        system_prompt_len=300, kinds=("math", "qa", "chatbot", "image"),
+        turns=(2, 4), turn_gap_s=4.0, hist_per_turn=80, prefix_share=0.6,
+        gen_tokens=(60, 20), final_gen=(60, 20), max_tool_calls=4,
+        max_ctx=4096)
+
+    def run(label, **kw):
+        t0 = time.time()
+        r = simulate(copy.deepcopy(reqs), POLICIES["infercept"], cost,
+                     gpu_capacity_tokens=cap, **kw)
+        return label, r, time.time() - t0
+
+    modes = [
+        run("dynamic"),
+        run("oracle", estimator=DurationEstimator(mode="oracle")),
+        run("learned", estimator=DurationEstimator(mode="learned")),
+    ]
+    lat = {label: r.normalized_latency() for label, r, _ in modes}
+    gap = lat["dynamic"] - lat["oracle"]
+    gap_closed = ((lat["dynamic"] - lat["learned"]) / gap
+                  if abs(gap) > 1e-9 else 1.0)
+    results = {"estimator": [], "speculation": [],
+               "gap_closed": round(gap_closed, 3),
+               "meets_half_gap": bool(gap_closed >= 0.5)}
+    for label, r, wall in modes:
+        row = {"mode": label,
+               "norm_lat_p50": round(r.normalized_latency(), 5),
+               "norm_lat_p90": round(r.normalized_latency(90), 5),
+               "tput_rps": round(r.throughput_rps(), 4),
+               "waste_frac": round(r.waste_fraction(), 4)}
+        results["estimator"].append(row)
+        _row(f"predictive_{label}", wall / max(1, r.iterations) * 1e6,
+             {**{k: v for k, v in row.items() if k != "mode"},
+              "gap_closed": round(gap_closed, 3)})
+
+    # speculative resume: perfect predictor (upper bound) vs a fixed
+    # per-kind template (rejected forks), on the learned estimator. Two
+    # memory regimes: with KV headroom a graft's skipped re-prefill is a
+    # straight win; at a pinched pool the fork's grafted context competes
+    # for the capacity InferCept is rationing, so speculation can LOSE —
+    # the sweep reports both so the trade is visible
+    preds = [("spec_oracle", OracleToolResultPredictor(vocab)),
+             ("spec_template", TemplateToolResultPredictor(
+                 {k: list(range(3)) for k in
+                  ("math", "qa", "chatbot", "image")}))]
+    for regime, regime_cap in [("headroom", None), ("saturated", cap)]:
+        base_lat = None
+        for label, pred in [("baseline", None)] + preds:
+            t0 = time.time()
+            kw = dict(estimator=DurationEstimator(mode="learned"),
+                      gpu_capacity_tokens=regime_cap)
+            if pred is not None:
+                kw.update(speculate=True, predictor=pred, spec_vocab=vocab)
+            r = simulate(copy.deepcopy(reqs), POLICIES["infercept"], cost,
+                         **kw)
+            wall = time.time() - t0
+            if pred is None:
+                base_lat = r.normalized_latency()
+                continue
+            validated = r.spec_accepted + r.spec_rejected
+            row = {"predictor": label, "regime": regime,
+                   "norm_lat_p50": round(r.normalized_latency(), 5),
+                   "norm_lat_vs_base": round(
+                       r.normalized_latency() / max(1e-9, base_lat), 3),
+                   "spec_forks": r.spec_forks,
+                   "accept_rate": round(r.spec_accepted / validated, 4)
+                   if validated else 0.0,
+                   "grafted_tokens": r.spec_grafted_tokens,
+                   "speculation_wasted_bs":
+                       round(r.ledger.causes["speculation_wasted"], 1)}
+            results["speculation"].append(row)
+            _row(f"predictive_{label}_{regime}",
+                 wall / max(1, r.iterations) * 1e6,
+                 {k: v for k, v in row.items()
+                  if k not in ("predictor", "regime")})
+
+    out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "predictive_sweep.json")
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2)
+
+
 def bench_multi_gpu_scaling(quick=False):
     """13B on 1 vs 2 GPUs, 70B on 4 (paper §5.1: distributed setting gains
     grow because more HBM per GPU is left for KV)."""
@@ -726,7 +831,7 @@ ALL = [bench_table1_workload, bench_fig2_end2end, bench_fig3_breakdown,
        bench_waste_s32, bench_estimator, bench_single_augment,
        bench_kernels, bench_multi_gpu_scaling, bench_prefix_cache_sweep,
        bench_decode_sweep, bench_mixed_sweep, bench_serve_sweep,
-       bench_overlap_sweep, bench_waste_trace]
+       bench_overlap_sweep, bench_waste_trace, bench_predictive_sweep]
 
 
 def main() -> None:
@@ -749,6 +854,9 @@ def main() -> None:
     ap.add_argument("--waste-trace", action="store_true",
                     help="run only the waste-attribution telemetry sweep "
                          "(alias for --only waste_trace)")
+    ap.add_argument("--predictive-sweep", action="store_true",
+                    help="run only the learned-estimator / speculative-"
+                         "resume sweep (alias for --only predictive_sweep)")
     args = ap.parse_args()
     if args.decode_sweep:
         args.only = "decode_sweep"
@@ -760,6 +868,8 @@ def main() -> None:
         args.only = "overlap_sweep"
     if args.waste_trace:
         args.only = "waste_trace"
+    if args.predictive_sweep:
+        args.only = "predictive_sweep"
     print("name,us_per_call,derived")
     for fn in ALL:
         if args.only and args.only not in fn.__name__:

@@ -118,6 +118,9 @@ class Scheduler:
         self.live: Dict[int, Request] = {}
         self.registry = registry if registry is not None else MetricsRegistry()
         self.stats = SchedulerStats(self.registry)
+        if self.estimator.registry is None:
+            # profile-miss / learned-mode telemetry lands in the shared dump
+            self.estimator.registry = self.registry
         self._recompute_debt: Dict[int, int] = {}
         # rid -> device tokens that are PURE cache credit (no real compute
         # invested since the last match); only these may be reclaimed when
@@ -194,11 +197,20 @@ class Scheduler:
             raise ValueError(pol.decision)
 
     def _discard(self, req: Request, now: float):
-        if req.device_tokens:
+        # The WHOLE context becomes recompute debt — including any prefix a
+        # prior partial swap-out already moved to host. Retaining the host
+        # payload would double-hold CPU bytes and send the request through
+        # swap_queue on resume to restore a prefix whose suffix is debt
+        # (restore-vs-recompute mis-ordering); drop it exactly as
+        # notify_swap_in_failed does, zeroed BEFORE the on_discard hook so
+        # the engine keeps no host-prefix page entries.
+        dropped = req.device_tokens + req.host_tokens
+        req.host_tokens = 0
+        if dropped:
             if self.on_discard is not None:
-                self.on_discard(req, req.device_tokens)
+                self.on_discard(req, dropped)
             self._recompute_debt[req.rid] = (
-                self._recompute_debt.get(req.rid, 0) + req.device_tokens)
+                self._recompute_debt.get(req.rid, 0) + dropped)
             req.device_tokens = 0
         self._cache_credit.pop(req.rid, None)
         if req in self.swap_out_order:
@@ -268,6 +280,12 @@ class Scheduler:
         """Interception finished: returned tokens arrive, request resumes.
         ``n_returned`` is the actual delivered token count (session API);
         None uses the scripted interception's declared count."""
+        if req.current_int is not None:
+            # feed the learned estimator the realized pause duration — the
+            # same observation point the WasteLedger's intercept_finished
+            # records (engine and simulator both route resumes here)
+            self.estimator.observe(req.current_int.kind,
+                                   max(0.0, now - req.t_call))
         req.resume(now, n_returned)
         self.paused.remove(req)
         if req in self.swap_out_order:
@@ -285,6 +303,23 @@ class Scheduler:
         else:
             req.phase = Phase.RUNNING
             self.running.append(req)
+
+    def notify_spec_graft(self, req: Request, device_tokens: int):
+        """A speculative fork was accepted at resume (engine/simulator
+        speculation, DESIGN.md §14): the fork's pages become the request's
+        device context, covering the pre-pause prefix AND the returned
+        tokens. Any recompute debt from a mid-pause discard is void —
+        nothing will be recomputed — and any host payload from a mid-pause
+        swap-out is dropped (the fork's device copy supersedes it). Must
+        be called BEFORE notify_resumed so resume routing sees the grafted
+        state."""
+        self._recompute_debt.pop(req.rid, None)
+        self._cache_credit.pop(req.rid, None)
+        if req in self.swap_out_order:
+            self.swap_out_order.remove(req)
+        req.pending_swap_out = 0
+        req.host_tokens = 0
+        req.device_tokens = device_tokens
 
     # ------------------------------------------------------------------
     # the per-iteration decision (§4.3)
@@ -356,10 +391,20 @@ class Scheduler:
             else:
                 budget = None  # unbounded, but stalls
             if pol.decision == "min_waste":
-                budget = self._min_waste_pass(plan, budget, now)
+                # _min_waste_pass consumes from ``budget`` and appends its
+                # swap-outs to the plan; _plan_swap_out below re-derives
+                # what is already used from the plan itself, so BOTH see
+                # the same total-budget semantics. The remaining swap-in
+                # budget is then total minus everything swapped out —
+                # counted ONCE. (Subtracting the plan total from the
+                # min-waste REMAINDER double-counted the min-waste swaps
+                # and silently starved every queued swap-in whenever they
+                # exceeded half the budget.)
+                self._min_waste_pass(plan, budget, now)
             self._plan_swap_out(plan, budget)
             budget = (None if budget is None
-                      else budget - sum(n for _, n in plan.swap_out))
+                      else max(0, budget
+                               - sum(n for _, n in plan.swap_out)))
             self._plan_swap_in(plan, budget, free)
 
         return plan
@@ -419,21 +464,32 @@ class Scheduler:
 
     def _plan_swap_in(self, plan: IterationPlan, budget: Optional[int],
                       free: int):
+        """Restore swapped-out contexts, FCFS by original arrival (no
+        skipping ahead). Two distinct exhaustion exits: the per-iteration
+        link budget running out (budget_exhausted — more swap-in resumes
+        next iteration's budget) vs the device token pool running out
+        (pool_exhausted — memory, not bandwidth, is the binding
+        constraint). Conflating them behind one ``n <= 0`` break hid
+        budget starvation as pool pressure; the split is observable via
+        the returned reason (tests) and keeps each branch independently
+        coverable."""
         used = 0
         for req in list(self.swap_queue):
-            if budget is not None and used >= budget:
-                break
+            if budget is not None and budget - used <= 0:
+                return "budget_exhausted"
+            if free <= 0:
+                return "pool_exhausted"
             n = req.host_tokens
             if budget is not None:
                 n = min(n, budget - used)
             n = min(n, free)
-            if n <= 0:
-                break  # FCFS by original arrival; no skipping ahead
+            assert n > 0, "swap_queue members always carry host tokens"
             plan.swap_in.append((req, n))
             used += n
             free -= n
             if budget is None:
                 plan.stall_s += self.cost.t_swap(n)
+        return "drained"
 
     def _min_waste_pass(self, plan: IterationPlan, budget: int,
                         now: float) -> int:

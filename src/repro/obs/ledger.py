@@ -21,6 +21,13 @@ iteration plus one per idle clock-jump, splitting the total across:
                           completion while context stayed pinned: pause
                           time that overlapped NOTHING (the complement of
                           the engine's ``overlapped_tool_seconds``).
+  * ``speculation_wasted`` — speculative-resume forks (DESIGN.md §14)
+                          whose prediction was REJECTED at resume: the
+                          byte-seconds their extra KV pages were held,
+                          integrated per iteration while the fork was
+                          alive and charged in one lump at rejection
+                          (accepted forks charge nothing — their pages
+                          became the resumed context).
 
 The per-iteration formulas are exactly the simulator's legacy
 ``waste_preserved`` / ``waste_recompute`` / ``waste_swap_stall`` lines,
@@ -51,7 +58,8 @@ from repro.core.waste import (waste_chunked_discard, waste_preserve,
 from repro.obs.metrics import MetricsRegistry
 
 WASTE_CAUSES = ("recompute", "swap_stall", "preserve_pinned",
-                "pipeline_bubble", "tool_unoverlapped")
+                "pipeline_bubble", "tool_unoverlapped",
+                "speculation_wasted")
 
 
 @dataclasses.dataclass
@@ -135,6 +143,16 @@ class WasteLedger:
             w = gap * gpu_used_tokens * self.cost.m_bytes
             self.causes["tool_unoverlapped"] += w
             self.total_check += w
+
+    def charge_speculation(self, byte_seconds: float):
+        """Charge a REJECTED speculative fork's accumulated occupancy
+        (extra fork tokens * M integrated over the fork's lifetime) to
+        ``speculation_wasted``. Called once per rejected fork, at resume
+        validation; accepted forks never reach here."""
+        if byte_seconds <= 0.0:
+            return
+        self.causes["speculation_wasted"] += byte_seconds
+        self.total_check += byte_seconds
 
     # ------------------------------------------------------------------
     # per-intercept records (§4.4 estimator accuracy)

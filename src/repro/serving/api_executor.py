@@ -169,6 +169,62 @@ class AsyncToolRuntime:
 
 
 # ---------------------------------------------------------------------------
+# speculative resume: tool-result prediction (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+class ToolResultPredictor:
+    """Protocol for speculative resume past intercepts: at an interception
+    the engine asks the predictor what token ids the tool is EXPECTED to
+    return; a non-None prediction COW-forks the sequence and keeps decoding
+    against it while the real tool runs. On resume the actual returned ids
+    are validated against the prediction — exact match grafts the fork
+    (re-prefill skipped), any mismatch frees it and falls back to the
+    baseline path bit-identically.
+
+    ``predict(rid, kind, seg_idx, n_hint)`` returns the predicted token id
+    list, or None to skip speculation for this interception. ``n_hint`` is
+    the scripted interception's declared returned-token count when known
+    (session intercepts pass the directive's hint), 0 otherwise.
+    Subclasses below cover the spectrum: templated per-kind returns (the
+    common "tool echoes a fixed acknowledgement" case) and a deterministic
+    oracle (upper bound / tests)."""
+
+    def predict(self, rid: int, kind: str, seg_idx: int,
+                n_hint: int) -> Optional[List[int]]:
+        raise NotImplementedError
+
+
+class TemplateToolResultPredictor(ToolResultPredictor):
+    """Predicts a fixed per-kind token template (e.g. an empty/templated
+    tool acknowledgement). Kinds absent from ``templates`` are not
+    speculated. Acceptance then measures how often the tool actually
+    returned its template."""
+
+    def __init__(self, templates: dict):
+        self.templates = {k: [int(t) for t in v]
+                          for k, v in templates.items()}
+
+    def predict(self, rid, kind, seg_idx, n_hint):
+        tpl = self.templates.get(kind)
+        return list(tpl) if tpl else None
+
+
+class OracleToolResultPredictor(ToolResultPredictor):
+    """Predicts exactly what the deterministic scripted runtime will
+    return (``returned_token_ids``) — 100% acceptance by construction.
+    The speculative-resume upper bound for benchmarks, and the fixture
+    that pins the graft path in tests."""
+
+    def __init__(self, vocab: int):
+        self.vocab = vocab
+
+    def predict(self, rid, kind, seg_idx, n_hint):
+        if n_hint <= 0:
+            return None
+        return [int(t) for t in
+                returned_token_ids(rid, seg_idx, n_hint, self.vocab)]
+
+
+# ---------------------------------------------------------------------------
 # engine-side scripted completions
 # ---------------------------------------------------------------------------
 class ScriptedToolRuntime:

@@ -118,6 +118,7 @@ from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import NullTracer, SpanTracer
 from repro.serving.api_executor import (AsyncToolRuntime,
                                         ScriptedToolRuntime,
+                                        ToolResultPredictor,
                                         prompt_token_ids)
 from repro.serving.session import FinishEvent, InterceptEvent, TokenEvent
 from repro.utils.hw import TPU_V5E
@@ -128,6 +129,26 @@ class ReqKV:
     tokens: List[int]                       # all known token ids
     pages: List[object]                     # ("dev", pid) | ("host", np tree)
     computed: int = 0                       # KV tokens materialized (prefix)
+
+
+@dataclasses.dataclass
+class SpecFork:
+    """A speculative continuation past an intercept (DESIGN.md §14): a
+    refcounted COW fork of the paused request's pages taken at the
+    intercept boundary, seeded with the predictor's guess at the tool's
+    returned ids and decoded ahead while the real tool runs. Validated at
+    resume: exact match grafts ``st`` onto the request (re-prefill
+    skipped); any mismatch frees the pages and the baseline resume path
+    runs untouched."""
+    req: Request
+    st: ReqKV                  # fork-private tokens / pages / computed
+    kind: str                  # interception kind (telemetry key)
+    base: int                  # parent context size at the fork (tokens)
+    predicted: List[int]       # predicted returned ids (validation key)
+    max_emit: int              # sampled-token budget past the prefill
+    emitted: int = 0           # sampled tokens produced so far
+    byte_seconds: float = 0.0  # extra occupancy, charged on reject/kill
+    dead: bool = False         # killed by page pressure; rejects at resume
 
 
 @dataclasses.dataclass
@@ -176,6 +197,9 @@ class Engine:
                  paged: bool = True,
                  fused: bool = True,
                  overlap: bool = True,
+                 speculate: bool = False,
+                 predictor: Optional[ToolResultPredictor] = None,
+                 spec_tokens: int = 32,
                  tracer: Optional[SpanTracer] = None,
                  dtype=jnp.float32):
         for blk in cfg.blocks:
@@ -247,6 +271,21 @@ class Engine:
         # overlap=False is the serial execute-then-sync oracle
         self.overlap = overlap
         self.stager = SwapStager(depth=2)
+        # speculative resume past intercepts (DESIGN.md §14): at an
+        # interception, COW-fork the sequence pages and keep decoding
+        # against the predictor's guess at the tool return; validate at
+        # resume. speculate=False (the default) never forks — streams,
+        # counters and the ledger are bit-identical to the baseline, the
+        # same differential-oracle discipline as paged/fused/overlap.
+        # Requires the paged path (forks ARE page refcounts) and a
+        # predictor to consult.
+        self.speculate = bool(speculate and paged and predictor is not None)
+        self.predictor = predictor
+        self.spec_tokens = int(spec_tokens)
+        self._spec_forks: Dict[int, SpecFork] = {}
+        # rid -> per-intercept speculation outcomes, surfaced by the
+        # session API (SessionHandle.speculation)
+        self.spec_log: Dict[int, List[dict]] = {}
         # off-thread caller-side tool execution; completions are injected
         # at the plan phase through resume_request (attach one directly or
         # via InferCeptClient(tool_workers=...))
@@ -289,7 +328,12 @@ class Engine:
             "logit_bytes": 0,
             "swap_overlap_bytes": 0, "pipeline_bubbles": 0,
             "pipeline_bubble_s": 0.0,
-            "tool_seconds": 0.0, "overlapped_tool_seconds": 0.0})
+            "tool_seconds": 0.0, "overlapped_tool_seconds": 0.0,
+            # speculation (§14): fork work lands in dedicated counters —
+            # decode/prefill bytes keep their per-REAL-token semantics
+            "spec_forks": 0, "spec_accepted": 0, "spec_rejected": 0,
+            "spec_killed": 0, "spec_prefill_tokens": 0,
+            "spec_decode_tokens": 0, "spec_grafted_tokens": 0})
         # rid -> (t_start, phase) while a request sits in a wait state
         # (queued after admission / swapped_wait after a swap-out resume);
         # closed into a span + wait histogram at its next compute
@@ -477,6 +521,7 @@ class Engine:
                             returned_tokens=act.returned_tokens or 0)
         req.close_segment(intc)
         c_before, gpu_before = req.device_tokens, self.sched.gpu_used()
+        self._maybe_fork(req, intc, end)   # before pages are freed/swapped
         self.sched.notify_intercepted(req, intc, end)
         self._note_intercept(req, intc, end, c_before, gpu_before)
         if act.returned_tokens is not None:
@@ -624,10 +669,12 @@ class Engine:
 
     def _ensure_writable(self, st: ReqKV, pos: int):
         """Copy-on-write: the page holding token position ``pos`` is about
-        to be written. Shared pages (prefix-cache hits, or pages the cache
-        adopted from this request) are immutable — take a private copy of
-        the payload first. Exclusive pages are written in place."""
-        if self.cache is None:
+        to be written. Shared pages (prefix-cache hits, pages the cache
+        adopted from this request, or pages a speculative fork holds) are
+        immutable — take a private copy of the payload first. Exclusive
+        pages are written in place. Without a cache or speculation no page
+        is ever shared, so the early-out keeps the oracle path free."""
+        if self.cache is None and not self.speculate:
             return
         pidx = pos // self.page
         if pidx >= len(st.pages):
@@ -636,8 +683,8 @@ class Engine:
         if kind != "dev" or not self.blocks.is_shared(pid):
             return
         new, copied = self.blocks.cow_target(pid)
-        if new is None:                # page pressure: evict cache, retry
-            self.cache.evict(1)
+        if new is None and self.cache is not None:
+            self.cache.evict(1)        # page pressure: evict cache, retry
             new, copied = self.blocks.cow_target(pid)
         if new is None:
             raise RuntimeError("out of KV pages during copy-on-write")
@@ -1137,6 +1184,294 @@ class Engine:
                 self._decode_ids.append(int(ids[b]))
 
     # ------------------------------------------------------------------
+    # speculative resume (DESIGN.md §14)
+    # ------------------------------------------------------------------
+    def _maybe_fork(self, req: Request, intc: Interception, t: float):
+        """Fork the sequence at an intercept boundary, BEFORE the
+        scheduler's pause decision frees or swaps its pages. The fork
+        bumps page refcounts, so whatever Eq. 5 does to the parent —
+        preserve, swap, discard — the forked KV survives under the fork's
+        own references, and the parent's state is never touched: a
+        rejected fork falls back bit-identically."""
+        if not self.speculate:
+            return
+        st = self.kv.get(req.rid)
+        seg_next = req.seg_idx + 1   # segment_done has not run yet; this
+        if (st is None                # is the index completions() will use
+                or req.rid in self._spec_forks
+                or seg_next >= len(req.segments)):
+            return
+        # fork only a clean, fully device-resident context: the pages ARE
+        # the state being forked (at an intercept boundary the trigger
+        # token is consumed, so tokens == computed == target_ctx)
+        if (req.host_tokens or st.computed != req.device_tokens
+                or req.device_tokens != req.target_ctx
+                or len(st.tokens) != req.target_ctx
+                or any(e is None or e[0] != "dev" for e in st.pages)):
+            return
+        nxt = req.segments[seg_next]
+        if not nxt.open and (nxt.gen_tokens or 0) < 1:
+            return
+        pred = self.predictor.predict(req.rid, intc.kind, seg_next,
+                                      intc.returned_tokens)
+        if not pred:
+            return
+        predicted = [int(p) % self.cfg.vocab_size for p in pred]
+        # emit budget: stop short of the next segment's boundary so the
+        # segment-completing token (interception/finish consult) always
+        # goes through the normal decode path; open (session) segments
+        # get exactly the seed emit — their controller is consulted at
+        # graft time before the token is ever fed onward
+        max_emit = 1 if nxt.open else min(self.spec_tokens, nxt.gen_tokens)
+        pids = [e[1] for e in st.pages]
+        self.blocks.fork(pids)
+        fork = SpecFork(
+            req=req, kind=intc.kind,
+            st=ReqKV(tokens=list(st.tokens) + predicted,
+                     pages=[("dev", pid) for pid in pids],
+                     computed=st.computed),
+            base=req.target_ctx, predicted=predicted, max_emit=max_emit)
+        self._spec_forks[req.rid] = fork
+        self.counters["spec_forks"] += 1
+        if self.tracer.enabled:
+            self.tracer.async_begin(
+                "spec", req.rid, intc.kind, t,
+                {"predicted_tokens": len(predicted),
+                 "max_emit": max_emit})
+
+    def _spec_free(self, fork: SpecFork):
+        self.blocks.free([e[1] for e in fork.st.pages
+                          if e is not None and e[0] == "dev"])
+        fork.st.pages = []
+
+    def _spec_kill(self, fork: SpecFork, why: str):
+        """Page pressure killed the fork mid-flight: release its pages
+        and charge the occupancy it wasted. The parent never knew the
+        fork existed, so the baseline path is untouched — the resume
+        simply finds no fork and runs normally."""
+        fork.dead = True
+        self._spec_forks.pop(fork.req.rid, None)
+        self._spec_free(fork)
+        self.ledger.charge_speculation(fork.byte_seconds)
+        self.counters["spec_killed"] += 1
+        self._spec_note(fork.req, fork, "killed", 0, self.now)
+
+    def _spec_note(self, req: Request, fork: SpecFork, outcome: str,
+                   grafted: int, t: float):
+        self.spec_log.setdefault(req.rid, []).append(
+            {"kind": fork.kind, "accepted": outcome == "accepted",
+             "outcome": outcome, "predicted_tokens": len(fork.predicted),
+             "emitted_tokens": fork.emitted, "grafted_tokens": grafted,
+             "time": t})
+        if self.tracer.enabled:
+            self.tracer.async_end(
+                "spec", req.rid, fork.kind, t,
+                {"outcome": outcome, "grafted_tokens": grafted,
+                 "wasted_byte_seconds": fork.byte_seconds
+                 if outcome != "accepted" else 0.0})
+
+    def _spec_pages(self, fork: SpecFork, upto_tokens: int) -> bool:
+        short = -(-upto_tokens // self.page) - len(fork.st.pages)
+        if short <= 0:
+            return True
+        got = self._allocate_pages(short)
+        if got is None:
+            return False
+        fork.st.pages.extend(("dev", pid) for pid in got)
+        return True
+
+    def _spec_cow(self, fork: SpecFork, pos: int) -> bool:
+        """COW for fork writes: the fork's tail page is shared with the
+        parent (and possibly the prefix cache) — take a private copy
+        before the fork appends into it. Same mechanics as
+        _ensure_writable, but failure kills the fork instead of raising:
+        speculation must never crash the real workload."""
+        st = fork.st
+        pidx = pos // self.page
+        if pidx >= len(st.pages):
+            return True
+        kind, pid = st.pages[pidx]
+        if kind != "dev" or not self.blocks.is_shared(pid):
+            return True
+        new, copied = self.blocks.cow_target(pid)
+        if new is None and self.cache is not None:
+            self.cache.evict(1)
+            new, copied = self.blocks.cow_target(pid)
+        if new is None:
+            return False
+        if copied:
+            src = jnp.asarray(pid, jnp.int32)
+            dst = jnp.asarray(new, jnp.int32)
+            self.pools = jax.tree.map(
+                lambda leaf: leaf.at[:, dst].set(
+                    jnp.take(leaf, src, axis=1)),
+                self.pools)
+            self.counters["cow_bytes"] += self.page * self.kv_token_bytes
+        st.pages[pidx] = ("dev", new)
+        return True
+
+    def _spec_advance(self, fork: SpecFork) -> bool:
+        """One speculative step. The first call prefills the predicted
+        returned tokens and emits the fork's first sampled token — exactly
+        the chunk-end emit the real resume path would produce; later calls
+        decode one token each. Sampling is keyed by (seed, position) only,
+        so an ACCEPTED fork's tokens are bit-identical to what the
+        baseline would decode after the real resume: speculation moves
+        them earlier in virtual time, it cannot change them."""
+        if fork.dead or fork.emitted >= fork.max_emit:
+            return False
+        req, st = fork.req, fork.st
+        if fork.emitted == 0:
+            # predicted-return prefill: positions [base, base + P)
+            start, n = st.computed, len(fork.predicted)
+            if not self._spec_pages(fork, start + n) \
+                    or not self._spec_cow(fork, start):
+                self._spec_kill(fork, "pages")
+                return False
+            n_pad = max(n, min(self._bucket(n),
+                               self.max_pages * self.page - start))
+            bt = np.full((1, self.max_pages), self.scratch_page, np.int64)
+            ids = self._device_page_ids(st, len(st.pages))
+            bt[0, :len(ids)] = ids
+            ids_list = st.tokens[start:start + n] + [0] * (n_pad - n)
+            chunk_ids = jnp.asarray([ids_list], jnp.int32)
+            if self.cfg.n_codebooks:
+                chunk_ids = jnp.broadcast_to(
+                    chunk_ids[..., None], (1, n_pad, self.cfg.n_codebooks))
+            logits, self.pools = self._extend_paged_jit(
+                self.params, chunk_ids, jnp.asarray([start], jnp.int32),
+                jnp.asarray([n], jnp.int32), self.pools,
+                jnp.asarray(bt, jnp.int32),
+                jnp.asarray([n - 1], jnp.int32))
+            st.computed = start + n
+            row = np.asarray(jax.device_get(logits[0]))
+            tid = self._sample_row(
+                req, row.reshape(-1, self.cfg.vocab_size)[-1], st.computed)
+            st.tokens.append(tid)
+            fork.emitted = 1
+            self.counters["spec_prefill_tokens"] += n
+            return True
+        pos = st.computed
+        if not self._spec_pages(fork, pos + 1) \
+                or not self._spec_cow(fork, pos):
+            self._spec_kill(fork, "pages")
+            return False
+        bt = np.full((1, self.max_pages), self.scratch_page, np.int64)
+        ids = self._device_page_ids(st, len(st.pages))
+        bt[0, :len(ids)] = ids
+        toks = jnp.asarray([st.tokens[pos]], jnp.int32)
+        if self.cfg.n_codebooks:
+            toks = jnp.broadcast_to(toks[:, None],
+                                    (1, self.cfg.n_codebooks))
+        logits, self.pools = self._decode_paged_jit(
+            self.params, toks, jnp.asarray([pos + 1], jnp.int32),
+            self.pools, jnp.asarray(bt, jnp.int32))
+        st.computed = pos + 1
+        arr = np.asarray(jax.device_get(logits))
+        tid = self._sample_row(
+            req, arr[0].reshape(-1, self.cfg.vocab_size)[-1], pos + 1)
+        st.tokens.append(tid)
+        fork.emitted += 1
+        self.counters["spec_decode_tokens"] += 1
+        return True
+
+    def _spec_step_forks(self, iter_time: float):
+        """Commit-phase fork stepping: every live fork accrues the extra
+        occupancy it pinned over this iteration and advances one step —
+        bounded piggyback on the batch's memory-bound window; the virtual
+        clock is untouched, so baseline requests are unperturbed."""
+        for fork in list(self._spec_forks.values()):
+            self._spec_advance(fork)
+            # accrue AFTER the step so the iteration that materialized the
+            # predicted prefill already pays for its residency — a fork
+            # rejected at the very next resume still shows up in the ledger
+            fork.byte_seconds += (fork.st.computed - fork.base) \
+                * self.cost.m_bytes * iter_time
+
+    def _spec_idle(self, gap: float):
+        """Idle-gap fork stepping: the GPU is otherwise parked, so fork
+        steps are budgeted against the gap's cost-model-priced virtual
+        time instead of piggybacking on a batch window."""
+        for fork in list(self._spec_forks.values()):
+            budget = gap
+            while not fork.dead and fork.emitted < fork.max_emit:
+                q = len(fork.predicted) if fork.emitted == 0 else 1
+                t = self.cost.t_fwd(q, fork.st.computed + q)
+                if t > budget:
+                    break
+                if not self._spec_advance(fork):
+                    break
+                budget -= t
+            # post-step accrual, same reasoning as _spec_step_forks
+            fork.byte_seconds += (fork.st.computed - fork.base) \
+                * self.cost.m_bytes * gap
+
+    def _spec_validate(self, req: Request, toks, t_done: float) -> bool:
+        """Resume-time validation. Exact-match accept: the fork's pages
+        and tokens replace the parent's context and the request decodes
+        immediately — the returned-token re-prefill is skipped entirely
+        (the recompute debt / host payload a mid-pause discard or swap
+        left behind is voided by notify_spec_graft). Any mismatch frees
+        the fork, charges ``speculation_wasted``, and returns False: the
+        baseline resume path below runs bit-identically."""
+        fork = self._spec_forks.pop(req.rid, None)
+        if fork is None:
+            return False
+        actual = [int(t) % self.cfg.vocab_size for t in toks]
+        if fork.dead or fork.emitted < 1 or actual != fork.predicted:
+            self._spec_free(fork)
+            self.ledger.charge_speculation(fork.byte_seconds)
+            self.counters["spec_rejected"] += 1
+            self._spec_note(req, fork, "rejected", 0, t_done)
+            return False
+        st = self.kv[req.rid]
+        # the fork's context supersedes the parent's: release the
+        # parent's device refs; host-payload entries just disappear
+        self.blocks.free([e[1] for e in st.pages
+                          if e is not None and e[0] == "dev"])
+        st.tokens = fork.st.tokens
+        st.pages = fork.st.pages
+        st.computed = fork.st.computed
+        self._match_seen.pop(req.rid, None)
+        k = fork.emitted
+        self.sched.notify_spec_graft(req, fork.base + len(fork.predicted))
+        self.sched.notify_resumed(req, self.now, n_returned=len(actual))
+        assert req.phase == Phase.RUNNING, "grafted resume must be ready"
+        # graft the fork's decoded tokens past the first (seed) emit:
+        # advance_decode's accounting, k - 1 tokens at once. max_emit
+        # stops short of the segment boundary, so no interception or
+        # finish can fall inside the graft.
+        for _ in range(k - 1):
+            req.target_ctx += 1
+            req.device_tokens += 1
+            req.gen_in_seg += 1
+            req.output_tokens += 1
+        if k > 1 and req.first_token_time is None:
+            req.first_token_time = self.now
+        self.counters["spec_accepted"] += 1
+        self.counters["spec_grafted_tokens"] += k
+        self._spec_note(req, fork, "accepted", k, t_done)
+        self._close_wait_mark(req, self.now)
+        if req.controller is not None:
+            # session seed token: consult the controller NOW, before the
+            # scheduler can feed the token to a decode — the same
+            # consult-before-use order the prefill-emit path guarantees
+            tid = st.tokens[-1]
+            local = {"intercepted": [], "finished": []}
+            if self._boundary_action(req, tid, self.now, local, set(),
+                                     set(), pop_on_fire=True):
+                for fin in local["finished"]:
+                    self._finish_request(fin, self.now)
+            else:
+                self._emit_token(req, tid, len(st.tokens) - 1, self.now)
+        else:
+            base_idx = len(st.tokens) - k
+            for i in range(k):
+                self._emit_token(req, st.tokens[base_idx + i],
+                                 base_idx + i, self.now)
+        return True
+
+    # ------------------------------------------------------------------
     # main loop
     # ------------------------------------------------------------------
     def step(self) -> bool:
@@ -1183,6 +1518,8 @@ class Engine:
                      "predicted_waste": rec.predicted_waste,
                      "realized_waste": rec.realized_waste})
                 self.tracer.instant(("req", req.rid), "resume", t_done)
+            if self._spec_validate(req, toks, t_done):
+                continue   # accepted fork grafted; re-prefill skipped
             self.kv[req.rid].tokens.extend(
                 int(t) % self.cfg.vocab_size for t in toks)
             self.sched.notify_resumed(req, self.now, n_returned=len(toks))
@@ -1226,6 +1563,8 @@ class Engine:
                 # pure tool_unoverlapped waste
                 self.ledger.charge_idle(gap, self.sched.gpu_used(),
                                         min(t_api, t_res) <= t_arr)
+                if self._spec_forks:
+                    self._spec_idle(gap)
                 if self.tracer.enabled:
                     self.tracer.span(
                         ("engine", "step"), "idle", self.now, target,
@@ -1369,6 +1708,7 @@ class Engine:
             self._emit_token(req, tid, len(st.tokens) - 1, end)
         for req, intc in events["intercepted"]:
             c_before, gpu_before = req.device_tokens, self.sched.gpu_used()
+            self._maybe_fork(req, intc, end)   # before pages are freed
             self.sched.notify_intercepted(req, intc, end)
             self._note_intercept(req, intc, end, c_before, gpu_before)
             self._tool_windows[req.rid] = [end, end + intc.duration, 0.0]
@@ -1378,19 +1718,29 @@ class Engine:
                 trigger_token_id=None, duration_hint=intc.duration,
                 caller_owned=False, time=end))
         for req in events["finished"]:
-            self.finished.append(req)
-            self._wait_marks.pop(req.rid, None)
-            if self.tracer.enabled:
-                self.tracer.instant(("req", req.rid), "finish", end,
-                                    {"output_tokens": req.output_tokens})
-            st = self.kv[req.rid]
-            self._register_in_cache(st)   # prompt+gen prefix reusable by
-            self.blocks.free([e[1] for e in st.pages   # follow-up turns
-                              if e is not None and e[0] == "dev"])
-            st.pages = []
-            self._match_seen.pop(req.rid, None)
-            self._emit(FinishEvent(rid=req.rid, n_tokens=req.output_tokens,
-                                   time=end))
+            self._finish_request(req, end)
+        # step forks LAST so one created by this iteration's intercepts
+        # still piggybacks on this iteration (a tool returning within a
+        # single iteration would otherwise always reject at emitted==0)
+        if self._spec_forks:
+            self._spec_step_forks(iter_time)
+
+    def _finish_request(self, req: Request, end: float):
+        """Engine-side finish bookkeeping, shared by the commit loop and
+        the speculative graft's inline seed-token consult."""
+        self.finished.append(req)
+        self._wait_marks.pop(req.rid, None)
+        if self.tracer.enabled:
+            self.tracer.instant(("req", req.rid), "finish", end,
+                                {"output_tokens": req.output_tokens})
+        st = self.kv[req.rid]
+        self._register_in_cache(st)   # prompt+gen prefix reusable by
+        self.blocks.free([e[1] for e in st.pages   # follow-up turns
+                          if e is not None and e[0] == "dev"])
+        st.pages = []
+        self._match_seen.pop(req.rid, None)
+        self._emit(FinishEvent(rid=req.rid, n_tokens=req.output_tokens,
+                               time=end))
 
     def run(self, max_steps: int = 100000, *,
             strict: bool = False) -> RunResult:

@@ -177,6 +177,12 @@ class SessionHandle:
     # virtual time of the last TokenEvent — feeds the session-level
     # TTFT / inter-token-gap histograms in the engine's registry
     _last_token_t: Optional[float] = None
+    # speculative-resume outcomes (DESIGN.md §14): one dict per validated
+    # intercept ({"kind", "accepted", "outcome", "predicted_tokens",
+    # "emitted_tokens", "grafted_tokens", "time"}), appended live by the
+    # engine — the client aliases this list to the engine's spec_log[rid],
+    # so the handle sees acceptances the moment they are grafted
+    speculation: List[dict] = dataclasses.field(default_factory=list)
 
     def next_event(self) -> Optional[Event]:
         return self.events.popleft() if self.events else None
@@ -184,6 +190,15 @@ class SessionHandle:
     @property
     def finished(self) -> bool:
         return self.state == "finished"
+
+    @property
+    def spec_accept_rate(self) -> Optional[float]:
+        """Accepted fraction of this session's validated speculative
+        forks; None when the session was never speculated on."""
+        if not self.speculation:
+            return None
+        acc = sum(1 for s in self.speculation if s["accepted"])
+        return acc / len(self.speculation)
 
 
 class InferCeptClient:
@@ -262,6 +277,11 @@ class InferCeptClient:
                               sampling=sampling, controller=controller)
         handle = SessionHandle(rid=rid, request=req, controller=controller,
                                tools=tools, buffer_events=buffer_events)
+        # alias the engine's speculation log for this rid: _spec_note
+        # appends to the same list object, so the handle surfaces
+        # accept/reject outcomes live (empty forever when the engine
+        # does not speculate)
+        handle.speculation = self.engine.spec_log.setdefault(rid, [])
         self.handles[rid] = handle
         self.engine.add_request(req)
         return handle

@@ -31,6 +31,9 @@ from repro.core.policy import PolicyConfig
 from repro.core.request import Request
 from repro.core.scheduler import Scheduler
 from repro.obs.ledger import WasteLedger
+# the deterministic scripted tool return — the engine's completions and
+# the speculation mirror's acceptance check share the same function
+from repro.serving.api_executor import returned_token_ids
 
 
 @dataclasses.dataclass
@@ -57,6 +60,13 @@ class SimResult:
     pipeline_bubble_s: float = 0.0
     tool_seconds: float = 0.0
     overlapped_tool_seconds: float = 0.0
+    # speculative resume (DESIGN.md §14), mirroring the engine's spec_*
+    # counters: forks taken at intercepts, resume-time validation
+    # outcomes, and tokens grafted (returned-prefill + decoded) on accept
+    spec_forks: int = 0
+    spec_accepted: int = 0
+    spec_rejected: int = 0
+    spec_grafted_tokens: int = 0
     # the cause-attributed WasteLedger (DESIGN.md §13), charged with the
     # exact expressions behind waste_preserved/waste_recompute/
     # waste_swap_stall above — ledger.causes mirrors those fields
@@ -118,6 +128,8 @@ def simulate(requests: Sequence[Request], policy: PolicyConfig,
              cache_max_pages: Optional[int] = None,
              overlap: bool = False,
              gpu_capacity_tokens: Optional[int] = None,
+             speculate: bool = False, predictor=None,
+             spec_tokens: int = 32, spec_vocab: int = 50_000,
              registry=None) -> SimResult:
     if estimator is None:
         estimator = DurationEstimator(mode=policy.estimator,
@@ -207,6 +219,93 @@ def simulate(requests: Sequence[Request], policy: PolicyConfig,
             else:
                 match_seen[req.rid] = cache.generation
 
+    # ---- speculative-resume mirror (DESIGN.md §14) ------------------------
+    # The engine's fork machinery without the tensors: fork/step cadence,
+    # occupancy accrual, acceptance (predictor output vs the deterministic
+    # scripted return), and the graft's scheduler bookkeeping all use the
+    # same formulas, so engine<->sim speculation accounting stays
+    # comparable. The simulator has no physical page pool, so the engine's
+    # page-pressure fork kills have no mirror here.
+    speculate = bool(speculate and predictor is not None)
+    spec_forks: Dict[int, dict] = {}
+
+    def spec_maybe_fork(req: Request, intc):
+        seg_next = req.seg_idx + 1
+        if (not speculate or req.rid in spec_forks
+                or seg_next >= len(req.segments)):
+            return
+        if req.host_tokens or req.device_tokens != req.target_ctx:
+            return
+        nxt = req.segments[seg_next]
+        if nxt.open or (nxt.gen_tokens or 0) < 1:
+            return
+        pred = predictor.predict(req.rid, intc.kind, seg_next,
+                                 intc.returned_tokens)
+        if not pred:
+            return
+        spec_forks[req.rid] = {
+            "base": req.target_ctx, "predicted": [int(p) for p in pred],
+            "max_emit": min(spec_tokens, nxt.gen_tokens),
+            "emitted": 0, "computed": req.target_ctx, "bs": 0.0}
+        res.spec_forks += 1
+
+    def spec_advance(fork: dict) -> bool:
+        # engine cadence: first step prefills the predicted return and
+        # emits the seed token; each later step decodes one token
+        if fork["emitted"] >= fork["max_emit"]:
+            return False
+        if fork["emitted"] == 0:
+            fork["computed"] += len(fork["predicted"])
+            fork["emitted"] = 1
+        else:
+            fork["computed"] += 1
+            fork["emitted"] += 1
+        return True
+
+    def spec_step_forks(iter_time: float):
+        for fork in spec_forks.values():
+            spec_advance(fork)
+            # post-step accrual (engine mirror): the iteration that
+            # materialized the prefill already pays for its residency
+            fork["bs"] += (fork["computed"] - fork["base"]) * m * iter_time
+
+    def spec_idle(gap: float):
+        for fork in spec_forks.values():
+            budget = gap
+            while fork["emitted"] < fork["max_emit"]:
+                q = len(fork["predicted"]) if fork["emitted"] == 0 else 1
+                t = cost.t_fwd(q, fork["computed"] + q)
+                if t > budget or not spec_advance(fork):
+                    break
+                budget -= t
+            fork["bs"] += (fork["computed"] - fork["base"]) * m * gap
+
+    def spec_validate(req: Request) -> bool:
+        fork = spec_forks.pop(req.rid, None)
+        if fork is None:
+            return False
+        actual = [int(x) for x in returned_token_ids(
+            req.rid, req.seg_idx, req.current_int.returned_tokens,
+            spec_vocab)]
+        if fork["emitted"] < 1 or actual != fork["predicted"]:
+            ledger.charge_speculation(fork["bs"])
+            res.spec_rejected += 1
+            return False
+        k = fork["emitted"]
+        sched.notify_spec_graft(req,
+                                fork["base"] + len(fork["predicted"]))
+        sched.notify_resumed(req, now)
+        for _ in range(k - 1):   # graft the fork's decoded tokens
+            req.target_ctx += 1
+            req.device_tokens += 1
+            req.gen_in_seg += 1
+            req.output_tokens += 1
+        if k > 1 and req.first_token_time is None:
+            req.first_token_time = now
+        res.spec_accepted += 1
+        res.spec_grafted_tokens += k
+        return True
+
     def admit(upto: float):
         while arrivals and arrivals[0].arrival <= upto:
             sched.submit(arrivals.popleft())
@@ -221,6 +320,8 @@ def simulate(requests: Sequence[Request], policy: PolicyConfig,
             if win is not None:
                 res.overlapped_tool_seconds += win[2]
             ledger.intercept_finished(req.rid, req.decision or "none", t)
+            if spec_validate(req):
+                continue   # accepted fork grafted; re-prefill skipped
             sched.notify_resumed(req, now)
         if cache is not None:
             for req in list(sched.waiting):
@@ -241,6 +342,8 @@ def simulate(requests: Sequence[Request], policy: PolicyConfig,
                 # overlapped no serving work — pinned context there is
                 # pure tool_unoverlapped waste
                 ledger.charge_idle(gap, sched.gpu_used(), t_res <= t_arr)
+                if spec_forks:
+                    spec_idle(gap)
             now = target
             continue
 
@@ -303,6 +406,7 @@ def simulate(requests: Sequence[Request], policy: PolicyConfig,
                 register(req, req.target_ctx)
         for req, intc in events["intercepted"]:
             c_before, gpu_before = req.device_tokens, sched.gpu_used()
+            spec_maybe_fork(req, intc)   # mirror: before the pause decision
             sched.notify_intercepted(req, intc, end)
             ledger.intercept_started(
                 req.rid, intc.kind, end,
@@ -311,6 +415,10 @@ def simulate(requests: Sequence[Request], policy: PolicyConfig,
             heapq.heappush(resume_heap,
                            (end + intc.duration, req.rid, req))
         res.finished.extend(events["finished"])
+        # step forks LAST (engine mirror): a fork created by this
+        # iteration's intercepts still piggybacks on this iteration
+        if spec_forks:
+            spec_step_forks(iter_time)
         now = end
 
     res.sim_time = now

@@ -1,0 +1,171 @@
+"""Duration-estimator unit tests (§4.4 / DESIGN.md §14).
+
+Covers the profile-mode silent-fallback fix (misses are now counted, not
+swallowed), the oracle negative-remaining clamp, and the online learned
+mode: EMA updates from the resume boundary, remaining-duration estimates,
+and the overrun/cold-start degradations to the dynamic rule.
+"""
+import pytest
+
+from repro.configs import get_config
+from repro.core import CostModel, DurationEstimator, POLICIES, Scheduler
+from repro.core.request import Interception, Request, Segment
+from repro.obs.metrics import MetricsRegistry
+from repro.utils.hw import A100
+
+
+def _paused_req(kind="math", duration=2.0, t_call=10.0):
+    r = Request(rid=0, arrival=0.0, prompt_len=100,
+                segments=[Segment(10, Interception(kind, duration, 5)),
+                          Segment(10, None)])
+    r.current_int = Interception(kind, duration, 5)
+    r.t_call = t_call
+    return r
+
+
+# ----------------------------------------------------------------------
+# profile mode: misses are counted, never silent
+# ----------------------------------------------------------------------
+
+def test_profile_hit_no_miss_counted():
+    est = DurationEstimator(mode="profile", profiles={"math": 3.0})
+    assert est.estimate(_paused_req("math"), 11.0) == pytest.approx(3.0)
+    assert est.profile_misses == 0
+
+
+def test_profile_unknown_kind_falls_back_dynamic_and_counts():
+    est = DurationEstimator(mode="profile", profiles={"math": 3.0})
+    r = _paused_req("search", t_call=10.0)
+    # unprofiled kind: value degrades to the dynamic rule (elapsed time)
+    assert est.estimate(r, 13.5) == pytest.approx(3.5)
+    assert est.profile_misses == 1
+    est.estimate(r, 14.0)
+    assert est.profile_misses == 2
+
+
+def test_profile_empty_profiles_counts_every_estimate():
+    # the original bug's worst case: profiles={} made profile mode a
+    # silent clone of dynamic with zero signal that profiling was absent
+    est = DurationEstimator(mode="profile", profiles={})
+    r = _paused_req("math", t_call=0.0)
+    for i in range(1, 4):
+        assert est.estimate(r, float(i)) == pytest.approx(float(i))
+        assert est.profile_misses == i
+
+
+def test_profile_miss_lands_in_registry_counter():
+    reg = MetricsRegistry()
+    est = DurationEstimator(mode="profile", profiles=None, registry=reg)
+    est.estimate(_paused_req("math"), 11.0)
+    assert reg.counters["estimator_profile_miss"] == 1
+
+
+def test_scheduler_attaches_registry_to_bare_estimator():
+    cost = CostModel(cfg=get_config("gpt-j-6b"), chip=A100, n_chips=1)
+    est = DurationEstimator(mode="profile", profiles={})
+    sched = Scheduler(POLICIES["infercept"], cost, estimator=est)
+    assert est.registry is sched.registry
+    est.estimate(_paused_req("math"), 11.0)
+    assert sched.registry.counters["estimator_profile_miss"] == 1
+
+
+def test_dynamic_and_oracle_misses_never_counted():
+    for mode in ("dynamic", "oracle"):
+        est = DurationEstimator(mode=mode)
+        est.estimate(_paused_req("math"), 11.0)
+        assert est.profile_misses == 0
+
+
+# ----------------------------------------------------------------------
+# oracle clamp
+# ----------------------------------------------------------------------
+
+def test_oracle_remaining_and_negative_clamp():
+    est = DurationEstimator(mode="oracle")
+    r = _paused_req("math", duration=2.0, t_call=10.0)
+    assert est.estimate(r, 11.0) == pytest.approx(1.0)
+    # past the known completion: remaining is negative, clamp to the floor
+    # (an unclamped value would make Eq. 5 prefer preserve at waste < 0)
+    assert est.estimate(r, 13.0) == pytest.approx(est.min_estimate)
+
+
+def test_no_interception_returns_floor():
+    r = _paused_req("math")
+    r.current_int = None
+    for mode in ("oracle", "profile", "dynamic", "learned"):
+        est = DurationEstimator(mode=mode)
+        assert est.estimate(r, 99.0) == pytest.approx(est.min_estimate)
+
+
+# ----------------------------------------------------------------------
+# learned mode (§14): online EMA over realized pauses
+# ----------------------------------------------------------------------
+
+def test_learned_cold_start_is_dynamic():
+    est = DurationEstimator(mode="learned")
+    r = _paused_req("math", t_call=10.0)
+    assert est.observations("math") == 0
+    assert est.estimate(r, 13.5) == pytest.approx(3.5)   # dynamic rule
+
+
+def test_learned_ema_update_and_remaining():
+    est = DurationEstimator(mode="learned", decay=0.25)
+    est.observe("math", 4.0)
+    assert est.learned_mean("math") == pytest.approx(4.0)
+    est.observe("math", 8.0)
+    # EMA: 0.75 * 4 + 0.25 * 8 = 5
+    assert est.learned_mean("math") == pytest.approx(5.0)
+    assert est.observations("math") == 2
+    r = _paused_req("math", t_call=10.0)
+    # estimate is the REMAINING duration: ema - elapsed
+    assert est.estimate(r, 11.0) == pytest.approx(4.0)
+    assert est.estimate(r, 14.0) == pytest.approx(1.0)
+
+
+def test_learned_overrun_degrades_to_dynamic():
+    est = DurationEstimator(mode="learned")
+    est.observe("math", 2.0)
+    r = _paused_req("math", t_call=10.0)
+    # elapsed (7) has overrun the prediction (2): longer paused ->
+    # longer remaining, exactly the dynamic rule
+    assert est.estimate(r, 17.0) == pytest.approx(7.0)
+
+
+def test_learned_unseen_kind_isolated():
+    est = DurationEstimator(mode="learned")
+    est.observe("math", 4.0)
+    r = _paused_req("search", t_call=10.0)
+    assert est.estimate(r, 13.0) == pytest.approx(3.0)   # cold start
+    assert est.learned_mean("search") is None
+
+
+def test_learned_observe_clamps_negative():
+    est = DurationEstimator(mode="learned")
+    est.observe("math", -5.0)
+    assert est.learned_mean("math") == 0.0
+
+
+def test_estimate_never_mutates_learned_state():
+    est = DurationEstimator(mode="learned")
+    est.observe("math", 4.0)
+    r = _paused_req("math", t_call=10.0)
+    for now in (10.5, 12.0, 20.0):
+        est.estimate(r, now)
+    assert est.learned_mean("math") == pytest.approx(4.0)
+    assert est.observations("math") == 1
+
+
+def test_scheduler_resume_feeds_learned_estimator():
+    """notify_resumed is the observation point: realized pause durations
+    stream into the EMA without any engine-side wiring."""
+    cost = CostModel(cfg=get_config("gpt-j-6b"), chip=A100, n_chips=1)
+    est = DurationEstimator(mode="learned")
+    sched = Scheduler(POLICIES["infercept"], cost, estimator=est)
+    from repro.core.request import Phase
+    r = _paused_req("math", t_call=10.0)
+    r.phase = Phase.PAUSED
+    sched.live[r.rid] = r
+    sched.paused.append(r)
+    sched.notify_resumed(r, 16.0)
+    assert est.observations("math") == 1
+    assert est.learned_mean("math") == pytest.approx(6.0)

@@ -68,6 +68,7 @@ def diff():
     return cfg, oracle, fused, unfused
 
 
+@pytest.mark.slow
 def test_paged_streams_match_gather_oracle(diff):
     """The headline differential property: every paged run — any policy,
     cache on or off, fused or not — emits the gather oracle's exact token
@@ -170,6 +171,7 @@ def test_paged_decode_moves_o1_bytes_per_token(diff):
 # ---------------------------------------------------------------------------
 # pipelined step: overlap-on vs overlap-off (DESIGN.md §12)
 # ---------------------------------------------------------------------------
+@pytest.mark.slow
 def test_overlap_off_streams_match_across_policies(diff):
     """The §12 differential pin: the serial engine (overlap=False, the
     execute-then-sync oracle) emits the exact token streams of the

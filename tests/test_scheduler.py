@@ -145,6 +145,154 @@ def test_swap_budget_respected():
     assert out_tokens < 20000  # pipelined across iterations, not all at once
 
 
+def test_discard_after_partial_swap_clears_host_payload():
+    """Regression: a discard landing mid-swap (partial host prefix already
+    staged) must fold the host payload into recompute debt and zero it —
+    the stale host_tokens used to double-hold CPU bytes and route the
+    resume through the swap queue to restore a prefix whose suffix was
+    debt."""
+    cost = _cost()
+    sched = Scheduler(POLICIES["infercept"], cost)
+    r = _req(1, prompt=100)
+    r.phase = Phase.PAUSED
+    r.device_tokens = 60
+    r.host_tokens = 40            # partial swap-out already landed
+    r.target_ctx = 100
+    r.t_call = 0.0
+    r.current_int = Interception("math", 5.0, 5)
+    r.pending_swap_out = 20
+    sched.live[1] = r
+    sched.paused.append(r)
+    sched.swap_out_order.append(r)
+    seen = {}
+    # the hook must already observe the zeroed host payload (the engine
+    # frees host page entries inside it)
+    sched.on_discard = lambda req, n: seen.update(n=n, host=req.host_tokens)
+    sched._discard(r, 1.0)
+    assert r.host_tokens == 0 and r.device_tokens == 0
+    assert r.pending_swap_out == 0 and r not in sched.swap_out_order
+    assert sched._recompute_debt[1] == 100       # device AND host folded in
+    assert seen == {"n": 100, "host": 0}
+    assert sched.cpu_used() == 0                 # no double-held CPU bytes
+    # resume routes through recompute, never the swap queue
+    sched.notify_resumed(r, 10.0)
+    assert r.phase == Phase.WAITING and r not in sched.swap_queue
+
+
+def test_plan_swap_in_distinct_exhaustion_exits():
+    """Regression: budget starvation used to exit through the same break
+    as pool exhaustion. The two reasons are now distinct returns."""
+    from repro.core.scheduler import IterationPlan
+    cost = _cost()
+
+    def fresh():
+        sched = Scheduler(POLICIES["infercept"], cost)
+        for rid in (1, 2):
+            r = _req(rid, prompt=100, arrival=float(rid))
+            r.phase = Phase.SWAPQ
+            r.host_tokens = 50
+            r.target_ctx = 100
+            sched.live[rid] = r
+            sched.swap_queue.append(r)
+        return sched
+
+    # link budget runs out first: the head request absorbs it all
+    sched = fresh()
+    plan = IterationPlan()
+    assert sched._plan_swap_in(plan, 30, 1000) == "budget_exhausted"
+    assert [(r.rid, n) for r, n in plan.swap_in] == [(1, 30)]
+
+    # device pool runs out first (unbudgeted blocking restore)
+    sched = fresh()
+    plan = IterationPlan()
+    assert sched._plan_swap_in(plan, None, 50) == "pool_exhausted"
+    assert [(r.rid, n) for r, n in plan.swap_in] == [(1, 50)]
+    assert plan.stall_s > 0                       # blocking restore stalls
+
+    # ample budget and pool: the queue drains
+    sched = fresh()
+    plan = IterationPlan()
+    assert sched._plan_swap_in(plan, 200, 1000) == "drained"
+    assert [(r.rid, n) for r, n in plan.swap_in] == [(1, 50), (2, 50)]
+
+
+def test_swap_budget_shared_across_directions():
+    """Regression for the min-waste budget bookkeeping: swap-out and
+    swap-in share one per-iteration link budget; the old code let each
+    direction spend the full budget independently."""
+    cost = _cost()
+    sched = Scheduler(POLICIES["infercept"], cost)
+    r1 = _req(1, prompt=20000, gens=(5, 5), durations=(100.0,))
+    r1.phase = Phase.PAUSED
+    r1.device_tokens = r1.target_ctx = 20000
+    r1.t_call = 0.0
+    r1.current_int = Interception("chatbot", 100.0, 5)
+    sched.live[1] = r1
+    sched.paused.append(r1)
+    r2 = _req(2, prompt=20000, arrival=0.5)
+    r2.phase = Phase.SWAPQ
+    r2.host_tokens = 20000
+    r2.target_ctx = 20000
+    sched.live[2] = r2
+    sched.swap_queue.append(r2)
+    r3 = _req(3, prompt=10)
+    r3.phase = Phase.RUNNING
+    r3.device_tokens = 10
+    sched.live[3] = r3
+    sched.running.append(r3)
+    plan = sched.next_iteration(100.0)
+    moved = sum(n for _, n in plan.swap_out) + sum(n for _, n in plan.swap_in)
+    t_iter = cost.t_fwd(max(1, plan.query_tokens), plan.context_tokens)
+    assert 0 < moved <= cost.swap_tokens_within(t_iter)
+
+
+def test_estimator_mode_flips_min_waste_decision():
+    """§4.4 estimator x policy interaction on a Table-1-style long call:
+    dynamic just after the intercept sees a tiny elapsed time and
+    preserves; oracle (and a learned estimator fed realized pauses) see
+    the long remaining duration and discard immediately. CPU capacity is
+    pinched to zero so the budget-ordered swap branch stays out of the
+    way and the Eq. 5 preserve/discard argmin decides alone."""
+    cost = _cost()
+
+    def setup(est):
+        sched = Scheduler(POLICIES["infercept"], cost, estimator=est,
+                          cpu_capacity_tokens=0)
+        r = _req(1, prompt=20000, gens=(5, 5), durations=(60.0,),
+                 kind="search")
+        r.phase = Phase.PAUSED
+        r.device_tokens = r.target_ctx = 20000
+        r.t_call = 10.0
+        r.current_int = Interception("search", 60.0, 5)
+        sched.live[1] = r
+        sched.paused.append(r)
+        r2 = _req(2, prompt=10)
+        r2.phase = Phase.RUNNING
+        r2.device_tokens = 10
+        sched.live[2] = r2
+        sched.running.append(r2)
+        return sched, r
+
+    sched, r = setup(DurationEstimator(mode="dynamic"))
+    sched.next_iteration(10.05)                # elapsed 0.05 s: looks short
+    assert r.decision == "preserve"
+
+    sched, r = setup(DurationEstimator(mode="oracle"))
+    sched.next_iteration(10.05)                # 60 s remain: evict
+    assert r.decision == "discard"
+
+    est = DurationEstimator(mode="learned")
+    est.observe("search", 60.0)                # one realized pause suffices
+    sched, r = setup(est)
+    sched.next_iteration(10.05)
+    assert r.decision == "discard"
+
+    est = DurationEstimator(mode="learned")    # cold start == dynamic
+    sched, r = setup(est)
+    sched.next_iteration(10.05)
+    assert r.decision == "preserve"
+
+
 def test_eviction_under_memory_pressure():
     cost = _cost()
     sched = Scheduler(POLICIES["vllm"], cost, gpu_capacity_tokens=150)

@@ -84,6 +84,7 @@ def sess_diff():
     return cfg, reqs, oracle, session, engines
 
 
+@pytest.mark.slow
 def test_scripted_sessions_match_legacy_streams(sess_diff):
     """The §11 equivalence pin: the scripted workloads replayed through
     the session API emit the legacy closed-loop engine's exact token
@@ -333,6 +334,7 @@ def _sampled_run(cfg, policy, *, fused=True, paged=True, seed=11,
     return {h.rid: cl.token_ids(h) for h in hs}, eng
 
 
+@pytest.mark.slow
 def test_sampling_deterministic_across_policies_and_paths():
     """Temperature/top-k sampling under a fixed per-request seed: noise is
     keyed by (seed, position) only, so streams are bit-identical across
@@ -358,6 +360,7 @@ def test_sampling_deterministic_across_policies_and_paths():
     assert other != base, "per-request seed had no effect"
 
 
+@pytest.mark.slow
 def test_top_p_deterministic_across_policies_and_paths():
     """Nucleus sampling rides the same (seed, position)-keyed seam: top-p
     streams are bit-identical across scheduling policies and across the
