@@ -803,6 +803,115 @@ def bench_predictive_sweep(quick=False):
         json.dump(results, f, indent=2)
 
 
+def bench_fault_sweep(quick=False):
+    """Fault-tolerant interception (DESIGN.md §15): goodput, p99
+    normalized latency, and the waste breakdown vs injected tool-fault
+    rate {0, 0.1, 0.3} under the deterministic chaos harness, with one
+    scripted mid-run cancellation per point so the ``cancelled`` cause is
+    populated. The sweep re-asserts the blast-radius contract in-line:
+    every session that survives a faulty run emits the fault-free run's
+    exact token stream. Writes benchmarks/fault_sweep.json — a
+    name->report dict whose rows carry ``causes`` +
+    ``total_waste_check`` so ``repro.obs.check`` re-validates the ledger
+    invariant in CI."""
+    import json
+    import os
+    from repro.configs import get_config
+    from repro.core import POLICIES
+    from repro.core.request import InterceptDirective, SamplingParams
+    from repro.serving.api_executor import (ChaosToolExecutor,
+                                            VirtualTimeToolExecutor)
+    from repro.serving.engine import Engine
+    from repro.serving.session import InferCeptClient
+    cfg = get_config("llama3.2-1b", tiny=True)
+    n_sessions = 8 if quick else 20
+    max_new = 24 if quick else 32
+
+    def detector():
+        fired = {}
+
+        def det(req, tid, now):
+            seen = fired.setdefault(req.rid, set())
+            if req.output_tokens in (5, 12) \
+                    and req.output_tokens not in seen:
+                seen.add(req.output_tokens)
+                return InterceptDirective(kind="math", duration_hint=0.05)
+            return None
+        return det
+
+    def run(rate):
+        t0 = time.time()
+        eng = Engine(cfg, POLICIES["infercept"], page_size=16, n_pages=128,
+                     max_model_len=256, seed=0)
+        cl = InferCeptClient(eng)
+        tools = ChaosToolExecutor(
+            VirtualTimeToolExecutor(cfg.vocab_size, n_tokens=4,
+                                    duration=0.05),
+            seed=11, failure_rate=rate, timeout_rate=rate / 2)
+        hs = [cl.submit([10 + i, 11 + i, 12 + i, 13 + i],
+                        detector=detector(), max_new_tokens=max_new,
+                        tools=tools,
+                        sampling=SamplingParams(tool_timeout_s=1.0,
+                                                tool_retries=1,
+                                                tool_backoff_s=0.01))
+              for i in range(n_sessions)]
+        # one deterministic mid-run cancellation so every point charges
+        # the ``cancelled`` cause too
+        cancel_rid, done = hs[1].rid, []
+
+        def hook(e):
+            req = e.sched.live.get(cancel_rid)
+            if not done and req is not None and req.output_tokens >= 6:
+                done.append(True)
+                e.cancel_request(cancel_rid)
+        eng.on_plan = hook
+        cl.poll()
+        wall = time.time() - t0
+        assert all(h.done for h in hs)
+        streams = {h.rid: cl.token_ids(h) for h in hs if h.finished}
+        return eng, hs, streams, wall
+
+    results = {}
+    clean = None
+    for rate in (0.0, 0.1, 0.3):
+        eng, hs, streams, wall = run(rate)
+        if rate == 0.0:
+            clean = streams
+        else:
+            for rid, stream in streams.items():
+                assert stream == clean[rid], \
+                    f"blast radius: session {rid} diverged at rate {rate}"
+        fins = [h.request for h in hs if h.finished]
+        lat = [r.latency_metrics()["normalized"] for r in fins]
+        row = {
+            "failure_rate": rate,
+            "timeout_rate": rate / 2,
+            "sessions": n_sessions,
+            "finished": len(fins),
+            "failed": eng.counters["sessions_failed"],
+            "cancelled": eng.counters["sessions_cancelled"],
+            "tool_faults": eng.counters["tool_faults"],
+            "tool_retries": eng.counters["tool_retries"],
+            "tool_timeouts": eng.counters["tool_timeouts"],
+            "goodput_tok_s": round(
+                sum(r.output_tokens for r in fins) / max(1e-9, eng.now), 3),
+            "norm_lat_p50": round(float(np.percentile(lat, 50)), 5),
+            "norm_lat_p99": round(float(np.percentile(lat, 99)), 5),
+            "waste_fraction": round(eng.ledger.waste_fraction(), 4),
+            "causes": dict(eng.ledger.causes),
+            "total_waste_check": eng.ledger.total_check,
+        }
+        results[f"rate_{rate}"] = row
+        _row(f"fault_sweep_r{rate}", wall / max(1, n_sessions) * 1e6,
+             {k: v for k, v in row.items()
+              if k not in ("causes", "total_waste_check")})
+
+    out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "fault_sweep.json")
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2)
+
+
 def bench_multi_gpu_scaling(quick=False):
     """13B on 1 vs 2 GPUs, 70B on 4 (paper §5.1: distributed setting gains
     grow because more HBM per GPU is left for KV)."""
@@ -831,7 +940,8 @@ ALL = [bench_table1_workload, bench_fig2_end2end, bench_fig3_breakdown,
        bench_waste_s32, bench_estimator, bench_single_augment,
        bench_kernels, bench_multi_gpu_scaling, bench_prefix_cache_sweep,
        bench_decode_sweep, bench_mixed_sweep, bench_serve_sweep,
-       bench_overlap_sweep, bench_waste_trace, bench_predictive_sweep]
+       bench_overlap_sweep, bench_waste_trace, bench_predictive_sweep,
+       bench_fault_sweep]
 
 
 def main() -> None:
@@ -857,6 +967,10 @@ def main() -> None:
     ap.add_argument("--predictive-sweep", action="store_true",
                     help="run only the learned-estimator / speculative-"
                          "resume sweep (alias for --only predictive_sweep)")
+    ap.add_argument("--fault-sweep", action="store_true",
+                    help="run only the chaos fault-injection sweep "
+                         "(goodput / p99 latency / waste vs fault rate; "
+                         "alias for --only fault_sweep)")
     args = ap.parse_args()
     if args.decode_sweep:
         args.only = "decode_sweep"
@@ -870,6 +984,8 @@ def main() -> None:
         args.only = "waste_trace"
     if args.predictive_sweep:
         args.only = "predictive_sweep"
+    if args.fault_sweep:
+        args.only = "fault_sweep"
     print("name,us_per_call,derived")
     for fn in ALL:
         if args.only and args.only not in fn.__name__:

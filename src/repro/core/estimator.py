@@ -53,15 +53,24 @@ class DurationEstimator:
         self.profile_misses = 0
         self._ema: Dict[str, float] = {}
         self._obs: Dict[str, int] = {}
+        self._fail_obs: Dict[str, int] = {}
 
     # ------------------------------------------------------------------
     # online learning (learned mode): one realized pause per resume
     # ------------------------------------------------------------------
-    def observe(self, kind: str, realized_s: float):
+    def observe(self, kind: str, realized_s: float, *,
+                failed: bool = False):
         """Feed one realized pause duration — called by the scheduler at
         notify_resumed, the same observation point the WasteLedger's
         intercept_finished records. Cheap for every mode (a dict update),
-        consulted only by ``learned``."""
+        consulted only by ``learned``.
+
+        Each retry ATTEMPT is observed separately (DESIGN.md §15):
+        ``failed=True`` marks a fault/timeout observation whose duration
+        is the attempt's realized pause (censored at the deadline for
+        timeouts). Failed attempts still update the EMA — a flaky tool's
+        retries are real pause time the next Eq. 5 decision should expect
+        — and are counted apart for telemetry."""
         realized_s = max(0.0, float(realized_s))
         prev = self._ema.get(kind)
         if prev is None:
@@ -70,9 +79,14 @@ class DurationEstimator:
             self._ema[kind] = (1.0 - self.decay) * prev \
                 + self.decay * realized_s
         self._obs[kind] = self._obs.get(kind, 0) + 1
+        if failed:
+            self._fail_obs[kind] = self._fail_obs.get(kind, 0) + 1
 
     def observations(self, kind: str) -> int:
         return self._obs.get(kind, 0)
+
+    def failed_observations(self, kind: str) -> int:
+        return self._fail_obs.get(kind, 0)
 
     def learned_mean(self, kind: str) -> Optional[float]:
         return self._ema.get(kind)

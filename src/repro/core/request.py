@@ -31,6 +31,8 @@ class Phase(enum.Enum):
     PAUSED = "paused"          # interception in flight
     SWAPQ = "swapq"            # resumed but context (partially) in host memory
     FINISHED = "finished"
+    CANCELLED = "cancelled"    # torn down by the caller (terminal)
+    FAILED = "failed"          # terminal tool failure (retries exhausted)
 
 
 @dataclasses.dataclass
@@ -67,6 +69,15 @@ class SamplingParams:
     top_k: int = 0
     top_p: float = 1.0
     seed: int = 0
+    # --- per-request tool fault policy (DESIGN.md §15) -------------------
+    # Defaults for every interception of this request; an
+    # InterceptDirective overrides them per call. tool_timeout_s is a
+    # virtual-time deadline per attempt (None = wait forever, the legacy
+    # behavior); tool_retries bounds retry-with-exponential-backoff
+    # (attempt i waits tool_backoff_s * 2**i after a retryable failure).
+    tool_timeout_s: Optional[float] = None
+    tool_retries: int = 0
+    tool_backoff_s: float = 0.05
 
     @property
     def greedy(self) -> bool:
@@ -85,6 +96,11 @@ class InterceptDirective:
     duration_hint: float = 0.0
     returned_tokens: Optional[int] = None
     reason: str = "explicit"   # explicit | stop_token | detector | scripted
+    # Per-call fault policy; None = inherit the request's SamplingParams
+    # defaults (tool_timeout_s / tool_retries / tool_backoff_s).
+    timeout_s: Optional[float] = None
+    max_retries: Optional[int] = None
+    backoff_s: Optional[float] = None
 
 
 @dataclasses.dataclass

@@ -61,12 +61,17 @@ class SchedulerStats:
       swap_in_failures — planned swap-ins the engine could not back with
         physical pages; the request was re-preempted to recompute
         instead of crashing the engine
+      pool_preempts — planned chunk/decode work the engine could not back
+        (COW / pool exhaustion); re-preempted to recompute, same seam
+      cancellations / tool_failures — sessions torn down mid-flight
+        (caller cancel / terminal tool failure, DESIGN.md §15)
     """
 
     _FIELDS = ("recompute_tokens", "fresh_tokens", "decode_tokens",
                "swapped_out_tokens", "swapped_in_tokens", "discards",
                "preserves", "swaps", "evictions", "cache_hit_tokens",
-               "swap_in_failures")
+               "swap_in_failures", "pool_preempts", "cancellations",
+               "tool_failures")
 
     def __init__(self, registry: Optional[MetricsRegistry] = None,
                  prefix: str = "sched_"):
@@ -230,16 +235,11 @@ class Scheduler:
             self.swap_out_order.append(req)
         self.stats.swaps += 1
 
-    def notify_swap_in_failed(self, req: Request, now: float):
-        """The engine could not allocate device pages for a planned
-        swap-in: the physical pool is exhausted in a way the token-capacity
-        accounting cannot see (COW copies, cache-held pages,
-        fragmentation). Gracefully re-preempt instead of aborting the
-        engine mid-commit: the whole context — the host payload and any
-        partially restored device pages — becomes recompute debt and the
+    def _preempt_to_waiting(self, req: Request, now: float):
+        """Shared graceful-preempt body: the whole context — the host
+        payload and any device pages — becomes recompute debt and the
         request requeues FCFS; admission control then waits for real
         memory before recomputing it."""
-        self.swap_queue.remove(req)
         dropped = req.device_tokens + req.host_tokens
         # the host payload is dropped, not retained: zero it BEFORE the
         # engine's on_discard hook so no host-prefix pages survive
@@ -256,9 +256,61 @@ class Scheduler:
         req.pending_swap_out = 0
         req.decision = "discard"
         self.stats.discards += 1
-        self.stats.swap_in_failures += 1
         req.phase = Phase.WAITING
         self._insert_waiting(req)
+
+    def notify_swap_in_failed(self, req: Request, now: float):
+        """The engine could not allocate device pages for a planned
+        swap-in: the physical pool is exhausted in a way the token-capacity
+        accounting cannot see (COW copies, cache-held pages,
+        fragmentation). Gracefully re-preempt instead of aborting the
+        engine mid-commit."""
+        self.swap_queue.remove(req)
+        self._preempt_to_waiting(req, now)
+        self.stats.swap_in_failures += 1
+
+    def notify_pool_exhausted(self, req: Request, now: float):
+        """The engine could not back this request's planned chunk/decode
+        writes with physical pages (COW copies under a saturated pool, a
+        cache holding every free page, fragmentation). Same graceful
+        re-preempt as a failed swap-in, but reachable from RUNNING and
+        WAITING too — the request drops out of this iteration's plan,
+        its context becomes recompute debt, and it requeues FCFS."""
+        for q in (self.running, self.waiting, self.swap_queue):
+            if req in q:
+                q.remove(req)
+        self._preempt_to_waiting(req, now)
+        self.stats.pool_preempts += 1
+
+    def notify_cancelled(self, req: Request, now: float, *,
+                         cause: str = "cancelled"):
+        """Tear a request out of EVERY scheduler structure, from any
+        phase — queued, running, paused, swapped, mid-swap — releasing
+        its memory accounting entirely (DESIGN.md §15). The engine's
+        on_discard hook frees/registers its device pages; the host
+        payload is dropped. ``cause`` is "cancelled" (caller teardown)
+        or "tool_failed" (terminal tool failure); either way the request
+        leaves ``live`` and never reschedules."""
+        for q in (self.running, self.paused, self.waiting, self.swap_queue,
+                  self.swap_out_order):
+            if req in q:
+                q.remove(req)
+        dropped = req.device_tokens + req.host_tokens
+        req.host_tokens = 0
+        if self.on_discard is not None:
+            self.on_discard(req, dropped)
+        req.device_tokens = 0
+        req.pending_swap_out = 0
+        req.current_int = None
+        self.live.pop(req.rid, None)
+        self._recompute_debt.pop(req.rid, None)
+        self._cache_credit.pop(req.rid, None)
+        if cause == "cancelled":
+            req.phase = Phase.CANCELLED
+            self.stats.cancellations += 1
+        else:
+            req.phase = Phase.FAILED
+            self.stats.tool_failures += 1
 
     def notify_cache_hit(self, req: Request, n_tokens: int):
         """The engine/simulator restored ``n_tokens`` of context from the

@@ -28,6 +28,12 @@ iteration plus one per idle clock-jump, splitting the total across:
                           alive and charged in one lump at rejection
                           (accepted forks charge nothing — their pages
                           became the resumed context).
+  * ``cancelled`` / ``tool_failed`` — sessions torn down mid-flight
+                          (caller cancellation / terminal tool failure,
+                          DESIGN.md §15): the byte-seconds their context
+                          occupied while resident, charged in one lump at
+                          teardown — nothing they held produced consumable
+                          output.
 
 The per-iteration formulas are exactly the simulator's legacy
 ``waste_preserved`` / ``waste_recompute`` / ``waste_swap_stall`` lines,
@@ -59,7 +65,7 @@ from repro.obs.metrics import MetricsRegistry
 
 WASTE_CAUSES = ("recompute", "swap_stall", "preserve_pinned",
                 "pipeline_bubble", "tool_unoverlapped",
-                "speculation_wasted")
+                "speculation_wasted", "cancelled", "tool_failed")
 
 
 @dataclasses.dataclass
@@ -152,6 +158,20 @@ class WasteLedger:
         if byte_seconds <= 0.0:
             return
         self.causes["speculation_wasted"] += byte_seconds
+        self.total_check += byte_seconds
+
+    def charge_abandoned(self, cause: str, byte_seconds: float):
+        """Charge a torn-down session's accumulated device occupancy (its
+        context tokens * M integrated over its resident lifetime, plus any
+        live speculative fork's) to ``cancelled`` or ``tool_failed``
+        (DESIGN.md §15): every byte-second the session held produced
+        output the caller will never consume, so at teardown the whole
+        accrual becomes waste in one lump — same shape as
+        ``charge_speculation``."""
+        assert cause in ("cancelled", "tool_failed"), cause
+        if byte_seconds <= 0.0:
+            return
+        self.causes[cause] += byte_seconds
         self.total_check += byte_seconds
 
     # ------------------------------------------------------------------

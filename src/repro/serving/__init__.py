@@ -1,9 +1,12 @@
 from repro.serving import workloads  # noqa: F401
-from repro.serving.api_executor import (ToolCall, ToolExecutor,  # noqa: F401
+from repro.serving.api_executor import (ChaosToolExecutor,  # noqa: F401
+                                        ToolCall, ToolError, ToolExecutor,
                                         ToolResult,
                                         VirtualTimeToolExecutor,
                                         WallClockToolExecutor)
-from repro.serving.session import (FinishEvent, InferCeptClient,  # noqa: F401
-                                   InterceptEvent, SamplingParams,
-                                   ScriptedClient, SessionController,
-                                   SessionHandle, TokenEvent)
+from repro.serving.session import (CancelledEvent, FailedEvent,  # noqa: F401
+                                   FinishEvent, InferCeptClient,
+                                   InterceptEvent, RejectedEvent,
+                                   SamplingParams, ScriptedClient,
+                                   SessionController, SessionHandle,
+                                   TokenEvent)

@@ -30,7 +30,7 @@ from __future__ import annotations
 import concurrent.futures
 import dataclasses
 import time
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -59,6 +59,7 @@ class ToolCall:
     trigger_token_id: Optional[int]    # the sampled id that fired (consumed)
     context_ids: List[int]             # the session's visible token stream
     time: float                        # engine virtual time of the intercept
+    attempt: int = 0                   # retry attempt (0 = first dispatch)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,7 +68,25 @@ class ToolResult:
     duration: float = 0.0              # virtual seconds the call took
 
 
-# A ToolExecutor is any callable ToolCall -> ToolResult.
+@dataclasses.dataclass(frozen=True)
+class ToolError:
+    """Typed tool failure: the other half of the executor outcome union
+    ``ToolResult | ToolError``. ``retryable`` gates the engine's bounded
+    retry-with-backoff policy (a non-retryable error, or one that exhausts
+    ``max_retries``, terminally fails the SESSION — never the engine).
+    ``duration`` is how long the failing attempt took in virtual seconds
+    before it failed (charged to the session's pause like a success)."""
+    kind: str                          # e.g. "unavailable", "exception", "timeout"
+    retryable: bool = True
+    message: str = ""
+    duration: float = 0.0
+
+
+ToolOutcome = Union[ToolResult, ToolError]
+
+# A ToolExecutor is any callable ToolCall -> ToolResult (or ToolError for
+# executors that participate in the typed fault protocol; raising is also
+# tolerated and mapped to a non-retryable ToolError by the runtime).
 ToolExecutor = Callable[[ToolCall], ToolResult]
 
 
@@ -109,6 +128,68 @@ class WallClockToolExecutor:
                           duration=max(self.min_duration, dt))
 
 
+class ChaosToolExecutor:
+    """Deterministic fault injection around a real executor (the chaos
+    harness of DESIGN.md §15). Every decision is a pure function of
+    ``(seed, rid, seg_idx, attempt)`` — NOT of wall clock, drain order, or
+    batch composition — so a chaos run is exactly reproducible and the
+    blast-radius tests can diff unaffected sessions' streams against a
+    fault-free run bit-for-bit.
+
+    Per call, one uniform draw u selects the outcome band:
+      u < failure_rate                      -> ToolError("unavailable",
+                                               retryable=True) after
+                                               ``failure_latency`` virtual s
+      u < failure_rate + timeout_rate       -> the call "hangs": the inner
+                                               result is returned but with
+                                               its virtual duration inflated
+                                               past any plausible deadline
+                                               (``hang_s``), so the engine's
+                                               virtual-time timeout fires and
+                                               the late result is discarded
+      otherwise                             -> inner result, with duration
+                                               scaled by ``latency_mult``
+
+    Retries see a fresh draw (attempt is in the key), so a failed call can
+    succeed on retry — the recovery path the soak exercises."""
+
+    def __init__(self, inner: ToolExecutor, *, seed: int,
+                 failure_rate: float = 0.0, timeout_rate: float = 0.0,
+                 latency_mult: float = 1.0, failure_latency: float = 0.01,
+                 hang_s: float = 1e6, retryable: bool = True):
+        self.inner = inner
+        self.seed = int(seed)
+        self.failure_rate = float(failure_rate)
+        self.timeout_rate = float(timeout_rate)
+        self.latency_mult = float(latency_mult)
+        self.failure_latency = float(failure_latency)
+        self.hang_s = float(hang_s)
+        self.retryable = bool(retryable)
+
+    def _draw(self, call: ToolCall) -> float:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, call.rid, call.seg_idx,
+                                    call.attempt]))
+        return float(rng.random())
+
+    def __call__(self, call: ToolCall) -> ToolOutcome:
+        u = self._draw(call)
+        if u < self.failure_rate:
+            return ToolError(kind="unavailable", retryable=self.retryable,
+                             message=f"injected failure (u={u:.3f})",
+                             duration=self.failure_latency)
+        res = self.inner(call)
+        if isinstance(res, ToolError):
+            return res
+        if u < self.failure_rate + self.timeout_rate:
+            return ToolResult(token_ids=res.token_ids,
+                              duration=res.duration + self.hang_s)
+        if self.latency_mult != 1.0:
+            return ToolResult(token_ids=res.token_ids,
+                              duration=res.duration * self.latency_mult)
+        return res
+
+
 class AsyncToolRuntime:
     """Off-thread tool execution for the pipelined engine step (DESIGN.md
     §12): ToolExecutor calls run on a thread pool, so a slow tool no
@@ -128,6 +209,7 @@ class AsyncToolRuntime:
         self._pool = concurrent.futures.ThreadPoolExecutor(
             max_workers=max_workers, thread_name_prefix="tool")
         self._futures = {}                 # Future -> ToolCall
+        self._discarded = set()            # rids whose results must be dropped
 
     @property
     def inflight(self) -> int:
@@ -136,22 +218,35 @@ class AsyncToolRuntime:
     def submit(self, executor: ToolExecutor, call: ToolCall):
         self._futures[self._pool.submit(executor, call)] = call
 
+    def discard(self, rid: int):
+        """Mark a session's in-flight calls as abandoned (cancellation /
+        terminal failure): their results are silently dropped at the next
+        ``drain`` instead of resuming a torn-down session. The worker
+        thread is not interrupted — it finishes into the void."""
+        if any(c.rid == rid for c in self._futures.values()):
+            self._discarded.add(rid)
+
     def drain(self):
         """Non-blocking: returns (completed, failed) — completed
-        (call, ToolResult) pairs in deterministic (intercept time, rid)
-        order, failed (call, exception) pairs for executors that raised.
-        Separating the two keeps the pop transactional: one raising
-        executor cannot discard other sessions' completed results (the
-        engine injects every completion first, THEN surfaces the failure
-        on its own thread)."""
+        (call, ToolResult | ToolError) pairs in deterministic
+        (intercept time, rid) order, failed (call, exception) pairs for
+        executors that raised. Separating the two keeps the pop
+        transactional: one raising executor cannot discard other sessions'
+        completed results (the engine injects every completion first, THEN
+        routes the failure through the per-session fault path). Results
+        for ``discard``-ed rids are dropped here."""
         done = [f for f in list(self._futures) if f.done()]
         out, failed = [], []
         for f in done:
             call = self._futures.pop(f)
+            if call.rid in self._discarded:
+                if not any(c.rid == call.rid for c in self._futures.values()):
+                    self._discarded.discard(call.rid)
+                continue
             try:
                 out.append((call, f.result()))
-            except BaseException as exc:        # noqa: BLE001 — surfaced
-                failed.append((call, exc))      # by the engine, not lost
+            except BaseException as exc:        # noqa: BLE001 — routed to
+                failed.append((call, exc))      # the fault path, not lost
         out.sort(key=lambda cr: (cr[0].time, cr[0].rid))
         failed.sort(key=lambda ce: (ce[0].time, ce[0].rid))
         return out, failed

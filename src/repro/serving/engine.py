@@ -117,10 +117,11 @@ from repro.obs.ledger import WasteLedger
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import NullTracer, SpanTracer
 from repro.serving.api_executor import (AsyncToolRuntime,
-                                        ScriptedToolRuntime,
+                                        ScriptedToolRuntime, ToolError,
                                         ToolResultPredictor,
                                         prompt_token_ids)
-from repro.serving.session import FinishEvent, InterceptEvent, TokenEvent
+from repro.serving.session import (CancelledEvent, FailedEvent, FinishEvent,
+                                   InterceptEvent, RejectedEvent, TokenEvent)
 from repro.utils.hw import TPU_V5E
 
 
@@ -149,6 +150,25 @@ class SpecFork:
     emitted: int = 0           # sampled tokens produced so far
     byte_seconds: float = 0.0  # extra occupancy, charged on reject/kill
     dead: bool = False         # killed by page pressure; rejects at resume
+
+
+@dataclasses.dataclass
+class FaultState:
+    """Per-pause fault policy and progress (DESIGN.md §15), created at the
+    intercept boundary from the directive/SamplingParams chain and popped
+    at the pause's resolution (resume, terminal failure, teardown).
+
+    ``deadline`` is the current attempt's virtual-time timeout (None =
+    wait forever); ``attempt`` counts launches, so retry N carries
+    attempt=N and stale completions from attempt N-1 are dropped by the
+    injection guards."""
+    kind: str
+    caller_owned: bool
+    timeout_s: Optional[float] = None
+    max_retries: int = 0
+    backoff_s: float = 0.05
+    attempt: int = 0
+    deadline: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -200,6 +220,7 @@ class Engine:
                  speculate: bool = False,
                  predictor: Optional[ToolResultPredictor] = None,
                  spec_tokens: int = 32,
+                 max_queued: Optional[int] = None,
                  tracer: Optional[SpanTracer] = None,
                  dtype=jnp.float32):
         for blk in cfg.blocks:
@@ -264,6 +285,32 @@ class Engine:
         # _pending_rids mirrors the queue for O(1) rid-collision checks
         self._pending_arrivals: List[Request] = []
         self._pending_rids: set = set()
+        # graceful admission (DESIGN.md §15): bounded intake. None keeps
+        # the legacy unbounded queue; with a bound, add_request rejects
+        # (returns False + RejectedEvent) instead of growing without limit.
+        self.max_queued = max_queued
+        # fault tolerance (DESIGN.md §15). All four queues are drained at
+        # the plan phase — the step's safe point — so cancels/faults posted
+        # from an event_sink callback mid-commit can never race the
+        # in-flight dispatch:
+        #   _fault_state  — rid -> FaultState for every in-flight pause
+        #   _fault_queue  — (due, seq, rid, ToolError): failures awaiting
+        #                   the retry/terminal decision at their virtual
+        #                   arrival time
+        #   _retry_queue  — (t0, seq, rid): backed-off re-launches
+        #   _cancel_queue — (rid, reason) teardown orders
+        self._fault_state: Dict[int, FaultState] = {}
+        self._fault_queue: List[Tuple[float, int, int, ToolError]] = []
+        self._retry_queue: List[Tuple[float, int, int]] = []
+        self._cancel_queue: List[Tuple[int, str]] = []
+        self._fault_seq = itertools.count()
+        # rid -> device byte-seconds accrued while resident; popped at
+        # finish, charged to the ledger in one lump at cancel/failure
+        self._accrued_bs: Dict[int, float] = {}
+        # chaos hook: called at every plan phase (the safe point) with the
+        # engine; the chaos harness uses it to inject cancellations
+        # deterministically mid-run
+        self.on_plan = None
         self.paged = paged
         self.fused = bool(fused and paged)   # the fused path runs on pools
         # pipelined step (DESIGN.md §12): dispatch-phase swap DMA staged
@@ -333,7 +380,12 @@ class Engine:
             # decode/prefill bytes keep their per-REAL-token semantics
             "spec_forks": 0, "spec_accepted": 0, "spec_rejected": 0,
             "spec_killed": 0, "spec_prefill_tokens": 0,
-            "spec_decode_tokens": 0, "spec_grafted_tokens": 0})
+            "spec_decode_tokens": 0, "spec_grafted_tokens": 0,
+            # fault tolerance (§15): tool faults observed / retries
+            # launched / timeouts fired, and terminal session outcomes
+            "tool_faults": 0, "tool_retries": 0, "tool_timeouts": 0,
+            "sessions_cancelled": 0, "sessions_failed": 0,
+            "sessions_rejected": 0})
         # rid -> (t_start, phase) while a request sits in a wait state
         # (queued after admission / swapped_wait after a swap-out resume);
         # closed into a span + wait histogram at its next compute
@@ -393,7 +445,20 @@ class Engine:
     # ------------------------------------------------------------------
     # request intake
     # ------------------------------------------------------------------
-    def add_request(self, req: Request):
+    def add_request(self, req: Request) -> bool:
+        """Submit a request. Returns False (emitting a RejectedEvent,
+        state untouched) when ``max_queued`` is set and the intake —
+        pending arrivals plus the scheduler's waiting queue — is already
+        at the bound: bounded backpressure instead of unbounded queue
+        growth (DESIGN.md §15). max_queued=None keeps the legacy
+        always-accept behavior."""
+        if self.max_queued is not None and \
+                (len(self._pending_arrivals) + len(self.sched.waiting)
+                 >= self.max_queued):
+            self.counters["sessions_rejected"] += 1
+            self._emit(RejectedEvent(rid=req.rid, reason="queue_full",
+                                     time=self.now))
+            return False
         # O(log n) search + O(n) shift instead of re-sorting the whole
         # queue on every insert; the list is descending by arrival, so
         # insort_left on the negated key keeps FIFO order among equal
@@ -401,6 +466,7 @@ class Engine:
         bisect.insort_left(self._pending_arrivals, req,
                            key=lambda r: -r.arrival)
         self._pending_rids.add(req.rid)
+        return True
 
     def _admit(self):
         while self._pending_arrivals and \
@@ -459,7 +525,10 @@ class Engine:
         while self._resume_queue and self._resume_queue[0][0] <= self.now:
             due, _, rid, toks = heapq.heappop(self._resume_queue)
             self._resume_pending.discard(rid)
-            out.append((self.sched.live[rid], toks, due))
+            req = self.sched.live.get(rid)
+            if req is None or req.phase != Phase.PAUSED:
+                continue   # torn down (cancel/failure) while queued
+            out.append((req, toks, due))
         return out
 
     def _inject_async_tools(self):
@@ -467,22 +536,289 @@ class Engine:
         through the resume queue, anchored at the intercept's virtual time
         plus the tool's reported duration — the same anchor the inline
         dispatch uses (the anchor is clamped to ``now`` when the engine
-        already advanced past it: virtual time never runs backwards)."""
+        already advanced past it: virtual time never runs backwards).
+
+        Failures never take down the engine (DESIGN.md §15): typed
+        ToolError outcomes AND raised exceptions both become per-session
+        fault postings (retry/terminal decision at _process_faults) —
+        co-resident sessions are untouched. Stale completions — a session
+        torn down or retried past the attempt that produced them — are
+        dropped."""
         if self.async_tools is None:
             return
         done, failed = self.async_tools.drain()
         for call, res in done:
+            req = self.sched.live.get(call.rid)
+            fs = self._fault_state.get(call.rid)
+            stale = (req is None or req.phase != Phase.PAUSED
+                     or call.rid in self._resume_pending
+                     or (fs is not None and fs.attempt != call.attempt))
+            if stale:
+                continue
+            if isinstance(res, ToolError):
+                self._post_fault(call.rid, res, at=call.time)
+                continue
             due = call.time + max(0.0, res.duration)
             self.resume_request(call.rid, res.token_ids,
                                 delay=max(0.0, due - self.now))
-        if failed:
-            # every completed result was injected first; now surface the
-            # executor failure on the engine thread (its session stays
-            # paused — the caller decides whether to resume or finish it)
-            call, exc = failed[0]
-            raise RuntimeError(
-                f"tool executor failed for rid {call.rid} "
-                f"(kind={call.kind}, seg={call.seg_idx})") from exc
+        for call, exc in failed:
+            req = self.sched.live.get(call.rid)
+            fs = self._fault_state.get(call.rid)
+            if (req is None or req.phase != Phase.PAUSED
+                    or call.rid in self._resume_pending
+                    or (fs is not None and fs.attempt != call.attempt)):
+                continue
+            self._post_fault(call.rid,
+                             ToolError(kind="exception", retryable=False,
+                                       message=repr(exc)),
+                             at=call.time)
+
+    # ------------------------------------------------------------------
+    # fault tolerance: tool faults, retries, timeouts, cancellation (§15)
+    # ------------------------------------------------------------------
+    def cancel_request(self, rid: int, *, reason: str = "client"):
+        """Tear a session down from ANY lifecycle state — queued, running,
+        paused, swapped, mid-swap, intercepted with an in-flight tool
+        (the result is discarded on drain), or speculating (the fork is
+        freed). Queued here and applied at the next plan phase (the
+        step's safe point), so cancelling from an event_sink callback
+        mid-commit can never race the in-flight dispatch. Unknown or
+        already-terminal rids are a no-op at apply time."""
+        self._cancel_queue.append((rid, reason))
+
+    def post_tool_fault(self, rid: int, err: ToolError):
+        """The caller's failure half of the intercept boundary (DESIGN.md
+        §15): report a typed ToolError outcome for a caller-owned
+        interception. Applied at the next plan phase; the engine then
+        retries with backoff (fresh pause interval, per-attempt estimator
+        observation) or terminally fails the SESSION — never itself."""
+        self._post_fault(rid, err, at=self.now)
+
+    def _post_fault(self, rid: int, err: ToolError, *, at: float):
+        due = max(self.now, at + max(0.0, err.duration))
+        heapq.heappush(self._fault_queue,
+                       (due, next(self._fault_seq), rid, err))
+
+    def _process_cancels(self):
+        while self._cancel_queue:
+            rid, reason = self._cancel_queue.pop(0)
+            if rid in self._pending_rids:
+                # not yet admitted: nothing allocated, drop the arrival
+                self._pending_arrivals = [
+                    r for r in self._pending_arrivals if r.rid != rid]
+                self._pending_rids.discard(rid)
+                self.counters["sessions_cancelled"] += 1
+                self._emit(CancelledEvent(rid=rid, reason=reason,
+                                          n_tokens=0, time=self.now))
+                continue
+            req = self.sched.live.get(rid)
+            if req is None:
+                continue               # finished/failed already: no-op
+            self._teardown_session(req, self.now, "cancelled")
+            self.counters["sessions_cancelled"] += 1
+            self._emit(CancelledEvent(rid=rid, reason=reason,
+                                      n_tokens=req.output_tokens,
+                                      time=self.now))
+
+    def _process_faults(self):
+        while self._fault_queue and self._fault_queue[0][0] <= self.now:
+            due, _, rid, err = heapq.heappop(self._fault_queue)
+            req = self.sched.live.get(rid)
+            if req is None or req.phase != Phase.PAUSED \
+                    or rid in self._resume_pending:
+                continue               # torn down or already resuming
+            self._tool_fault(req, err, due)
+
+    def _tool_fault(self, req: Request, err: ToolError, t: float):
+        """Decide a failed attempt's fate: bounded retry with exponential
+        backoff, or terminal session failure. Each attempt is a separate
+        observation — the estimator sees its realized pause (censored at
+        the deadline for timeouts), the ledger closes its intercept
+        record, and the retry re-enters as a fresh pause interval."""
+        fs = self._fault_state.get(req.rid)
+        kind = fs.kind if fs is not None else \
+            (req.current_int.kind if req.current_int is not None else "tool")
+        self.counters["tool_faults"] += 1
+        realized = max(0.0, t - req.t_call)
+        self.sched.estimator.observe(kind, realized, failed=True)
+        if not err.retryable or fs is None or fs.attempt >= fs.max_retries:
+            self._fail_session(req, err, max(self.now, t))
+            return
+        # close THIS attempt's accounting: tool window, ledger record,
+        # tracer span — the retry re-opens fresh ones
+        win = self._tool_windows.pop(req.rid, None)
+        if win is not None:
+            self.counters["tool_seconds"] += realized
+            self.counters["overlapped_tool_seconds"] += \
+                min(win[2], realized)
+        rec = self.ledger.intercept_finished(
+            req.rid, req.decision or "none", t)
+        if self.tracer.enabled and rec is not None:
+            self.tracer.async_end("tool", req.rid, rec.kind, t,
+                                  {"branch": rec.branch,
+                                   "outcome": "fault_retry",
+                                   "attempt": fs.attempt,
+                                   "error": err.kind})
+        fs.attempt += 1
+        fs.deadline = None             # re-armed when the retry launches
+        t0 = max(self.now, t) + fs.backoff_s * (2 ** (fs.attempt - 1))
+        # the backoff is pause time too: re-anchor t_call at the retry's
+        # launch so the next attempt is a fresh interval for Eq. 5 / the
+        # estimator, with the elapsed span folded into paused_time
+        req.paused_time += t0 - req.t_call
+        req.t_call = t0
+        heapq.heappush(self._retry_queue,
+                       (t0, next(self._fault_seq), req.rid))
+        self.counters["tool_retries"] += 1
+
+    def _launch_retries(self):
+        """Fire due retries: re-open the attempt's accounting (ledger
+        record, tracer span, tool window) and re-dispatch — the scripted
+        stub relaunches engine-side; caller-owned interceptions emit an
+        InterceptEvent(reason="retry") so the client re-invokes its
+        ToolExecutor with the bumped attempt index."""
+        while self._retry_queue and self._retry_queue[0][0] <= self.now:
+            t0, _, rid = heapq.heappop(self._retry_queue)
+            req = self.sched.live.get(rid)
+            fs = self._fault_state.get(rid)
+            if req is None or req.phase != Phase.PAUSED or fs is None:
+                continue               # torn down while backing off
+            intc = req.current_int
+            assert intc is not None, "paused request without interception"
+            self._note_intercept(req, intc, t0, req.device_tokens,
+                                 self.sched.gpu_used())
+            if fs.timeout_s is not None:
+                fs.deadline = t0 + fs.timeout_s
+            if fs.caller_owned:
+                self._tool_windows[rid] = [t0, float("inf"), 0.0]
+            else:
+                self._tool_windows[rid] = [t0, t0 + intc.duration, 0.0]
+                self.api.launch(req, intc, t0)
+            self._emit(InterceptEvent(
+                rid=rid, kind=intc.kind, reason="retry",
+                trigger_token_id=None, duration_hint=intc.duration,
+                caller_owned=fs.caller_owned, time=t0,
+                attempt=fs.attempt))
+
+    def _fire_timeouts(self):
+        """Fire virtual-time deadlines. A resolution due on-or-before the
+        deadline wins (it will be processed normally); anything later
+        loses — the late result is purged so a post-deadline completion
+        can never resurrect the attempt — and the timeout enters the
+        fault path as a retryable ToolError("timeout")."""
+        for rid, fs in list(self._fault_state.items()):
+            if fs.deadline is None or fs.deadline > self.now:
+                continue
+            req = self.sched.live.get(rid)
+            if req is None or req.phase != Phase.PAUSED:
+                self._fault_state.pop(rid, None)
+                continue
+            ent = self.api.inflight.get(rid)
+            if ent is not None and ent[0] <= fs.deadline:
+                continue               # scripted completion beats it
+            if any(e[2] == rid and e[0] <= fs.deadline
+                   for e in self._resume_queue):
+                continue               # caller resume beats it
+            if any(e[2] == rid and e[0] <= fs.deadline
+                   for e in self._fault_queue):
+                continue               # an earlier failure beats it
+            self.api.inflight.pop(rid, None)
+            if rid in self._resume_pending:
+                self._resume_queue = [e for e in self._resume_queue
+                                      if e[2] != rid]
+                heapq.heapify(self._resume_queue)
+                self._resume_pending.discard(rid)
+            if any(e[2] == rid for e in self._fault_queue):
+                self._fault_queue = [e for e in self._fault_queue
+                                     if e[2] != rid]
+                heapq.heapify(self._fault_queue)
+            if self.async_tools is not None:
+                self.async_tools.discard(rid)
+            self.counters["tool_timeouts"] += 1
+            deadline, fs.deadline = fs.deadline, None
+            self._tool_fault(req, ToolError(
+                kind="timeout", retryable=True,
+                message=f"attempt {fs.attempt} exceeded "
+                        f"{fs.timeout_s}s (virtual)"), deadline)
+
+    def _fault_policy(self, req: Request, act):
+        """Resolve the pause's fault policy: directive field ->
+        SamplingParams default -> legacy (wait forever, no retries)."""
+        sp = req.sampling
+        timeout = act.timeout_s if act.timeout_s is not None \
+            else (sp.tool_timeout_s if sp is not None else None)
+        retries = act.max_retries if act.max_retries is not None \
+            else (sp.tool_retries if sp is not None else 0)
+        backoff = act.backoff_s if act.backoff_s is not None \
+            else (sp.tool_backoff_s if sp is not None else 0.05)
+        return timeout, int(retries), float(backoff)
+
+    def _fail_session(self, req: Request, err: ToolError, t: float):
+        fs = self._fault_state.get(req.rid)
+        kind = fs.kind if fs is not None else \
+            (req.current_int.kind if req.current_int is not None else "tool")
+        self._teardown_session(req, t, "tool_failed")
+        self.counters["sessions_failed"] += 1
+        self._emit(FailedEvent(rid=req.rid, kind=kind, error=err,
+                               n_tokens=req.output_tokens, time=t))
+
+    def _teardown_session(self, req: Request, t: float, cause: str):
+        """Shared teardown for cancellation and terminal tool failure:
+        abandon every in-flight completion path, close the open pause
+        accounting, free the speculative fork, release pages and
+        scheduler structures, and charge the accrued byte-seconds to the
+        ledger's ``cancelled``/``tool_failed`` cause — the session ends;
+        the engine and every co-resident session are untouched."""
+        rid = req.rid
+        self._fault_state.pop(rid, None)
+        # in-flight completion paths: scripted stub entry, off-thread tool
+        # (result discarded on drain), queued resumes/retries/faults
+        self.api.inflight.pop(rid, None)
+        if self.async_tools is not None:
+            self.async_tools.discard(rid)
+        self._resume_pending.discard(rid)
+        for qname in ("_resume_queue", "_retry_queue", "_fault_queue"):
+            q = getattr(self, qname)
+            if any(e[2] == rid for e in q):
+                q = [e for e in q if e[2] != rid]
+                heapq.heapify(q)
+                setattr(self, qname, q)
+        # close the open pause accounting (ledger record + tracer span
+        # stay balanced: every async_begin gets its async_end)
+        win = self._tool_windows.pop(rid, None)
+        if win is not None:
+            realized = max(0.0, t - req.t_call)
+            self.counters["tool_seconds"] += realized
+            self.counters["overlapped_tool_seconds"] += \
+                min(win[2], realized)
+        rec = self.ledger.intercept_finished(
+            rid, req.decision or "none", t)
+        if self.tracer.enabled and rec is not None:
+            self.tracer.async_end("tool", rid, rec.kind, t,
+                                  {"branch": rec.branch, "outcome": cause})
+        self._close_wait_mark(req, t)
+        # a live speculative fork dies with the session; its accrued
+        # occupancy joins the teardown charge (not speculation_wasted —
+        # the fork didn't mispredict, its session went away)
+        fork = self._spec_forks.pop(rid, None)
+        fork_bs = 0.0
+        if fork is not None:
+            fork.dead = True
+            fork_bs = fork.byte_seconds
+            self._spec_free(fork)
+            self.counters["spec_killed"] += 1
+            self._spec_note(req, fork, cause, 0, t)
+        # release scheduler structures + pages (notify_cancelled zeroes
+        # host retention BEFORE on_discard, so _on_discard frees every
+        # device page and drops host payloads: kv ends empty, no leaks)
+        self.sched.notify_cancelled(
+            req, t, cause="cancelled" if cause == "cancelled"
+            else "tool_failed")
+        bs = self._accrued_bs.pop(rid, 0.0) + fork_bs
+        self.ledger.charge_abandoned(cause, bs)
+        if self.tracer.enabled:
+            self.tracer.instant(("req", rid), cause, t,
+                                {"byte_seconds": bs})
 
     def _emit(self, ev):
         if not self.emit_events:
@@ -524,6 +860,11 @@ class Engine:
         self._maybe_fork(req, intc, end)   # before pages are freed/swapped
         self.sched.notify_intercepted(req, intc, end)
         self._note_intercept(req, intc, end, c_before, gpu_before)
+        timeout_s, retries, backoff = self._fault_policy(req, act)
+        self._fault_state[req.rid] = FaultState(
+            kind=intc.kind, caller_owned=act.returned_tokens is None,
+            timeout_s=timeout_s, max_retries=retries, backoff_s=backoff,
+            deadline=None if timeout_s is None else end + timeout_s)
         if act.returned_tokens is not None:
             # scripted stub owns the resume: the due time is known now
             self._tool_windows[req.rid] = [end, end + intc.duration, 0.0]
@@ -655,39 +996,64 @@ class Engine:
             got = self.blocks.allocate(n)
         return got
 
-    def _ensure_pages(self, st: ReqKV, upto_tokens: int):
+    def _sacrifice_fork(self) -> bool:
+        """Page pressure last resort: kill one live speculative fork
+        (lowest rid — deterministic) so real work can allocate. Pure
+        speculation must never block or crash the real workload."""
+        if not self._spec_forks:
+            return False
+        self._spec_kill(self._spec_forks[min(self._spec_forks)], "pool")
+        return True
+
+    def _try_ensure_pages(self, st: ReqKV, upto_tokens: int) -> bool:
         # request the whole shortfall in one _allocate_pages call: a single
         # cache-eviction pass covers the lot, instead of one page (and
         # potentially one eviction scan) per loop trip
         short = -(-upto_tokens // self.page) - len(st.pages)
         if short <= 0:
-            return
+            return True
         got = self._allocate_pages(short)
+        while got is None and self._sacrifice_fork():
+            got = self._allocate_pages(short)
         if got is None:
-            raise RuntimeError("out of KV pages — size the engine up")
+            return False
         st.pages.extend(("dev", pid) for pid in got)
+        return True
 
-    def _ensure_writable(self, st: ReqKV, pos: int):
+    def _ensure_pages(self, st: ReqKV, upto_tokens: int):
+        # backstop over the graceful path: _back_plan pre-flights every
+        # planned chunk/decode write, so dispatch-time failure here means
+        # a bookkeeping bug, not ordinary pool pressure
+        if not self._try_ensure_pages(st, upto_tokens):
+            raise RuntimeError("out of KV pages — size the engine up")
+
+    def _try_ensure_writable(self, st: ReqKV, pos: int) -> bool:
         """Copy-on-write: the page holding token position ``pos`` is about
         to be written. Shared pages (prefix-cache hits, pages the cache
         adopted from this request, or pages a speculative fork holds) are
         immutable — take a private copy of the payload first. Exclusive
         pages are written in place. Without a cache or speculation no page
-        is ever shared, so the early-out keeps the oracle path free."""
+        is ever shared, so the early-out keeps the oracle path free.
+        Under exhaustion the copy target is reclaimed by evicting cold
+        cache pages one at a time, then sacrificing speculative forks;
+        False only when the pool genuinely cannot back the copy."""
         if self.cache is None and not self.speculate:
-            return
+            return True
         pidx = pos // self.page
         if pidx >= len(st.pages):
-            return
+            return True
         kind, pid = st.pages[pidx]
         if kind != "dev" or not self.blocks.is_shared(pid):
-            return
+            return True
         new, copied = self.blocks.cow_target(pid)
-        if new is None and self.cache is not None:
-            self.cache.evict(1)        # page pressure: evict cache, retry
-            new, copied = self.blocks.cow_target(pid)
-        if new is None:
-            raise RuntimeError("out of KV pages during copy-on-write")
+        while new is None:
+            if self.cache is not None and self.cache.evict(1) > 0:
+                new, copied = self.blocks.cow_target(pid)
+                continue
+            if self._sacrifice_fork():
+                new, copied = self.blocks.cow_target(pid)
+                continue
+            return False
         if copied:
             src = jnp.asarray(pid, jnp.int32)
             dst = jnp.asarray(new, jnp.int32)
@@ -696,6 +1062,13 @@ class Engine:
                 self.pools)
             self.counters["cow_bytes"] += self.page * self.kv_token_bytes
         st.pages[pidx] = ("dev", new)
+        return True
+
+    def _ensure_writable(self, st: ReqKV, pos: int):
+        # backstop, same contract as _ensure_pages: unreachable for
+        # planned work once _back_plan has pre-flighted the plan
+        if not self._try_ensure_writable(st, pos):
+            raise RuntimeError("out of KV pages during copy-on-write")
 
     def _device_page_ids(self, st: ReqKV, n_pages: int) -> List[int]:
         ids = []
@@ -943,6 +1316,56 @@ class Engine:
         self.counters["swap_bytes"] += \
             len(idxs) * self.page * self.kv_token_bytes
         return True
+
+    def _pool_preempt(self, req: Request):
+        """The device pool cannot physically back this request's planned
+        write (COW copies and cache-held pages the scheduler's token
+        accounting cannot see): re-preempt gracefully — the context
+        becomes recompute debt and the request requeues FCFS — instead of
+        the old hard RuntimeError mid-dispatch. Same shape as the PR 5
+        swap-in seam (_swap_in_failed), extended to every planned
+        chunk/decode write."""
+        self._close_wait_mark(req, self.now)
+        self._wait_marks[req.rid] = (self.now, "queued")
+        if self.tracer.enabled:
+            self.tracer.instant(("req", req.rid), "pool_preempt", self.now)
+        self.sched.notify_pool_exhausted(req, self.now)
+        # notify's on_discard hook freed the device pages (host retention
+        # was zeroed first); drop any leftover host payload entries
+        st = self.kv[req.rid]
+        st.pages = []
+        st.computed = 0
+
+    def _back_plan(self, plan):
+        """Graceful admission (DESIGN.md §15): pre-flight the physical
+        backing for every planned chunk/decode write — pages allocated
+        and COW targets resolved in the exact order the dispatch paths
+        would — BEFORE anything reaches the device. Entries the pool
+        cannot back are dropped from the plan and their requests
+        re-preempted via _pool_preempt; the dropped entries' planned
+        compute still charges the iteration (pool thrash is not free),
+        and the raising _ensure_* backstops downstream become
+        unreachable for planned work."""
+        if not (plan.chunks or plan.decode):
+            return
+        kept = []
+        for req, n in plan.chunks:
+            st = self.kv[req.rid]
+            if self._try_ensure_pages(st, st.computed + n) and \
+                    self._try_ensure_writable(st, st.computed):
+                kept.append((req, n))
+            else:
+                self._pool_preempt(req)
+        plan.chunks = kept
+        kept = []
+        for req in plan.decode:
+            st = self.kv[req.rid]
+            if self._try_ensure_pages(st, req.target_ctx + 1) and \
+                    self._try_ensure_writable(st, req.target_ctx):
+                kept.append(req)
+            else:
+                self._pool_preempt(req)
+        plan.decode = kept
 
     def _swap_in_failed(self, req: Request):
         """A planned swap-in could not be backed by physical pages
@@ -1494,8 +1917,23 @@ class Engine:
         dispatched to the device yet."""
         self._admit()
         self._prefill_emits = []
+        # fault machinery (§15) runs at this safe point, in dependency
+        # order: cancels first (a cancelled session must not retry), then
+        # the chaos hook (its cancels apply immediately), async-tool
+        # completions/faults, due retries (which may inline-dispatch and
+        # fail again -> same-phase fault processing), fault decisions,
+        # deadlines (a queued resolution due on-or-before its deadline
+        # wins), and finally the due resumes themselves.
+        self._process_cancels()
+        if self.on_plan is not None:
+            self.on_plan(self)
+            self._process_cancels()
         self._inject_async_tools()
+        self._launch_retries()
+        self._process_faults()
+        self._fire_timeouts()
         for req, toks, t_done in self._due_resumes():
+            self._fault_state.pop(req.rid, None)   # pause resolved
             # tool-overlap accounting (§12): the pause's virtual duration,
             # and the part of it that coincided with engine-busy time —
             # tool latency hidden behind serving rather than extending it
@@ -1552,7 +1990,14 @@ class Engine:
         t = self.api.next_completion_time()
         t_api = t if t is not None else INF
         t_res = self._resume_queue[0][0] if self._resume_queue else INF
-        nxt = min(t_arr, t_api, t_res)
+        # fault machinery wake-ups (§15): backed-off retries, queued
+        # failures, and the earliest armed timeout deadline
+        t_rty = self._retry_queue[0][0] if self._retry_queue else INF
+        t_flt = self._fault_queue[0][0] if self._fault_queue else INF
+        t_ddl = min((fs.deadline for fs in self._fault_state.values()
+                     if fs.deadline is not None), default=INF)
+        t_tool = min(t_api, t_res, t_rty, t_flt, t_ddl)
+        nxt = min(t_arr, t_tool)
         if nxt != INF:
             target = max(self.now, nxt)
             gap = target - self.now
@@ -1562,7 +2007,15 @@ class Engine:
                 # overlapped NO serving work — pinned context there is
                 # pure tool_unoverlapped waste
                 self.ledger.charge_idle(gap, self.sched.gpu_used(),
-                                        min(t_api, t_res) <= t_arr)
+                                        t_tool <= t_arr)
+                # idle occupancy accrues too (§15): pinned context over
+                # the jump is held memory a teardown must charge
+                m_bytes = self.cost.m_bytes
+                for r in self.sched.live.values():
+                    if r.device_tokens:
+                        self._accrued_bs[r.rid] = \
+                            self._accrued_bs.get(r.rid, 0.0) \
+                            + r.device_tokens * m_bytes * gap
                 if self._spec_forks:
                     self._spec_idle(gap)
                 if self.tracer.enabled:
@@ -1607,6 +2060,7 @@ class Engine:
                 plan.stall_s = max(0.0, plan.stall_s - self.cost.t_swap(n))
                 self._swap_in_failed(req)
         plan.swap_in = ok_in
+        self._back_plan(plan)
         if plan.chunks or plan.decode:
             self.counters["mixed_iterations"] += 1
         if self.fused:
@@ -1668,6 +2122,15 @@ class Engine:
             iter_time, stall, self.overlap, rec_tokens,
             plan.query_tokens, self.sched.paused_device_tokens(),
             self.sched.gpu_used())
+        # per-session occupancy accrual (§15): integrate each live
+        # request's device-resident bytes over the iteration, so a later
+        # cancel/terminal failure charges exactly what the session held
+        # (popped unchargeable at normal finish)
+        m_bytes = self.cost.m_bytes
+        for r in self.sched.live.values():
+            if r.device_tokens:
+                self._accrued_bs[r.rid] = self._accrued_bs.get(r.rid, 0.0) \
+                    + r.device_tokens * m_bytes * iter_time
         if self.tracer.enabled:
             self._trace_iteration(plan, start, end, t_model, stall)
         for req, _ in plan.chunks:
@@ -1711,6 +2174,14 @@ class Engine:
             self._maybe_fork(req, intc, end)   # before pages are freed
             self.sched.notify_intercepted(req, intc, end)
             self._note_intercept(req, intc, end, c_before, gpu_before)
+            sp = req.sampling
+            self._fault_state[req.rid] = FaultState(
+                kind=intc.kind, caller_owned=False,
+                timeout_s=None if sp is None else sp.tool_timeout_s,
+                max_retries=0 if sp is None else sp.tool_retries,
+                backoff_s=0.05 if sp is None else sp.tool_backoff_s,
+                deadline=None if sp is None or sp.tool_timeout_s is None
+                else end + sp.tool_timeout_s)
             self._tool_windows[req.rid] = [end, end + intc.duration, 0.0]
             self.api.launch(req, intc, end)
             self._emit(InterceptEvent(
@@ -1730,6 +2201,8 @@ class Engine:
         the speculative graft's inline seed-token consult."""
         self.finished.append(req)
         self._wait_marks.pop(req.rid, None)
+        self._accrued_bs.pop(req.rid, None)   # produced output: not waste
+        self._fault_state.pop(req.rid, None)
         if self.tracer.enabled:
             self.tracer.instant(("req", req.rid), "finish", end,
                                 {"output_tokens": req.output_tokens})
@@ -1754,6 +2227,8 @@ class Engine:
         while True:
             more = (self._pending_arrivals or self.sched.has_work()
                     or self.api.inflight or self._resume_queue
+                    or self._cancel_queue or self._retry_queue
+                    or self._fault_queue
                     or (self.async_tools is not None
                         and self.async_tools.inflight))
             if not more:

@@ -37,11 +37,12 @@ from typing import (Callable, Deque, Dict, List, Optional, Sequence, Union)
 
 from repro.core.request import (InterceptDirective, Request, SamplingParams,
                                 Segment)
-from repro.serving.api_executor import (ToolCall, ToolExecutor, ToolResult,
-                                        prompt_token_ids)
+from repro.serving.api_executor import (ToolCall, ToolError, ToolExecutor,
+                                        ToolResult, prompt_token_ids)
 
 __all__ = [
     "SamplingParams", "TokenEvent", "InterceptEvent", "FinishEvent",
+    "FailedEvent", "CancelledEvent", "RejectedEvent",
     "SessionHandle", "SessionController", "ScriptedController",
     "InferCeptClient", "ScriptedClient",
 ]
@@ -67,11 +68,12 @@ class InterceptEvent:
     stub."""
     rid: int
     kind: str
-    reason: str           # explicit | stop_token | detector | scripted
+    reason: str           # explicit | stop_token | detector | scripted | retry
     trigger_token_id: Optional[int]
     duration_hint: float
     caller_owned: bool
     time: float
+    attempt: int = 0      # retry attempt index (0 = first dispatch)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,7 +83,41 @@ class FinishEvent:
     time: float
 
 
-Event = Union[TokenEvent, InterceptEvent, FinishEvent]
+@dataclasses.dataclass(frozen=True)
+class FailedEvent:
+    """Terminal tool failure (retries exhausted or non-retryable error,
+    DESIGN.md §15): the SESSION ends here — its pages are freed and its
+    accrued byte-seconds charged to the ledger's ``tool_failed`` cause —
+    but the engine and every co-resident session are untouched."""
+    rid: int
+    kind: str             # tool kind that failed
+    error: ToolError
+    n_tokens: int         # tokens generated before the failure
+    time: float
+
+
+@dataclasses.dataclass(frozen=True)
+class CancelledEvent:
+    """The caller tore the session down (``SessionHandle.cancel()`` /
+    ``Engine.cancel_request``); pages freed, byte-seconds charged to
+    ``cancelled``."""
+    rid: int
+    reason: str
+    n_tokens: int
+    time: float
+
+
+@dataclasses.dataclass(frozen=True)
+class RejectedEvent:
+    """Admission control refused the session at submit: bounded intake is
+    full (backpressure). Nothing was allocated; resubmit later."""
+    rid: int
+    reason: str           # e.g. "queue_full"
+    time: float
+
+
+Event = Union[TokenEvent, InterceptEvent, FinishEvent,
+              FailedEvent, CancelledEvent, RejectedEvent]
 
 
 # ---------------------------------------------------------------------------
@@ -96,12 +132,20 @@ class SessionController:
     def __init__(self, *, stop_tokens: Sequence[int] = (),
                  detector: Optional[Callable] = None,
                  max_new_tokens: Optional[int] = None,
-                 kind: str = "tool", duration_hint: float = 0.0):
+                 kind: str = "tool", duration_hint: float = 0.0,
+                 timeout_s: Optional[float] = None,
+                 max_retries: Optional[int] = None,
+                 backoff_s: Optional[float] = None):
         self.stop_tokens = frozenset(int(t) for t in stop_tokens)
         self.detector = detector       # detector(req, token_id, now)
         self.max_new_tokens = max_new_tokens
         self.kind = kind
         self.duration_hint = duration_hint
+        # per-session tool fault policy defaults (DESIGN.md §15); None
+        # defers to the request's SamplingParams, resolved by the engine
+        self.timeout_s = timeout_s
+        self.max_retries = max_retries
+        self.backoff_s = backoff_s
         self._pending = None           # explicit intercept()/finish()
 
     def request_intercept(self, duration_hint: Optional[float] = None,
@@ -110,7 +154,9 @@ class SessionController:
             kind=kind or self.kind,
             duration_hint=self.duration_hint if duration_hint is None
             else duration_hint,
-            reason="explicit")
+            reason="explicit",
+            timeout_s=self.timeout_s, max_retries=self.max_retries,
+            backoff_s=self.backoff_s)
 
     def request_finish(self):
         self._pending = "finish"
@@ -126,7 +172,10 @@ class SessionController:
         if token_id in self.stop_tokens:
             return InterceptDirective(kind=self.kind,
                                       duration_hint=self.duration_hint,
-                                      reason="stop_token")
+                                      reason="stop_token",
+                                      timeout_s=self.timeout_s,
+                                      max_retries=self.max_retries,
+                                      backoff_s=self.backoff_s)
         if self.max_new_tokens is not None \
                 and req.output_tokens >= self.max_new_tokens:
             return "finish"
@@ -170,7 +219,12 @@ class SessionHandle:
     tools: Optional[ToolExecutor]
     events: Deque[Event] = dataclasses.field(default_factory=deque)
     # queued | active | intercepted | resuming | finished
+    #   | failed | cancelled | rejected        (terminal, DESIGN.md §15)
     state: str = "queued"
+    # terminal tool failure detail (set with state == "failed")
+    error: Optional[ToolError] = None
+    # backref set by InferCeptClient.submit — enables handle.cancel()
+    client: Optional[object] = None
     # False = state/tool dispatch only, no per-handle event retention
     # (batch replay paths that never read handle.events)
     buffer_events: bool = True
@@ -190,6 +244,20 @@ class SessionHandle:
     @property
     def finished(self) -> bool:
         return self.state == "finished"
+
+    @property
+    def done(self) -> bool:
+        """Terminal in ANY way: finished normally, terminally failed,
+        cancelled, or rejected at admission."""
+        return self.state in ("finished", "failed", "cancelled", "rejected")
+
+    def cancel(self, reason: str = "client"):
+        """Tear this session down from whatever state it is in — queued,
+        running, swapped, intercepted with an in-flight tool, or
+        speculating. Takes effect at the engine's next plan phase (safe
+        point); the CancelledEvent lands on this handle's stream."""
+        assert self.client is not None, "handle not attached to a client"
+        self.client.cancel(self, reason=reason)
 
     @property
     def spec_accept_rate(self) -> Optional[float]:
@@ -276,14 +344,20 @@ class InferCeptClient:
                               else arrival, list(map(int, prompt_ids)),
                               sampling=sampling, controller=controller)
         handle = SessionHandle(rid=rid, request=req, controller=controller,
-                               tools=tools, buffer_events=buffer_events)
+                               tools=tools, buffer_events=buffer_events,
+                               client=self)
         # alias the engine's speculation log for this rid: _spec_note
         # appends to the same list object, so the handle surfaces
         # accept/reject outcomes live (empty forever when the engine
         # does not speculate)
         handle.speculation = self.engine.spec_log.setdefault(rid, [])
         self.handles[rid] = handle
-        self.engine.add_request(req)
+        if not self.engine.add_request(req):
+            # admission backpressure: the RejectedEvent already routed
+            # through the sink (handle.state == "rejected"); nothing was
+            # allocated engine-side, so drop the dead handle mapping
+            self.engine.spec_log.pop(rid, None)
+            del self.handles[rid]
         return handle
 
     # -- the event-drain loop -------------------------------------------
@@ -312,6 +386,13 @@ class InferCeptClient:
             h._last_token_t = ev.time
         elif isinstance(ev, FinishEvent):
             h.state = "finished"
+        elif isinstance(ev, FailedEvent):
+            h.state = "failed"
+            h.error = ev.error
+        elif isinstance(ev, CancelledEvent):
+            h.state = "cancelled"
+        elif isinstance(ev, RejectedEvent):
+            h.state = "rejected"
         elif isinstance(ev, InterceptEvent):
             h.state = "intercepted"
             if ev.caller_owned and h.tools is not None:
@@ -330,15 +411,31 @@ class InferCeptClient:
         call = ToolCall(rid=handle.rid, kind=ev.kind,
                         seg_idx=handle.request.seg_idx,
                         trigger_token_id=ev.trigger_token_id,
-                        context_ids=self.token_ids(handle), time=ev.time)
+                        context_ids=self.token_ids(handle), time=ev.time,
+                        attempt=ev.attempt)
         if self.engine.async_tools is not None:
-            # off-thread: the engine injects the completion at its next
-            # plan phase through the same resume queue (DESIGN.md §12)
+            # off-thread: the engine injects the completion (or routes the
+            # failure through the fault path) at its next plan phase
             self.engine.async_tools.submit(handle.tools, call)
             handle.state = "resuming"
             return
-        res: ToolResult = handle.tools(call)
-        self.resume(handle, res.token_ids, delay=res.duration)
+        try:
+            res = handle.tools(call)
+        except Exception as exc:       # noqa: BLE001 — per-session fault,
+            res = ToolError(kind="exception", retryable=False,  # not fatal
+                            message=repr(exc))
+        if isinstance(res, ToolError):
+            # typed failure: the engine retries with backoff or fails the
+            # SESSION at its next plan phase — never the engine
+            self.engine.post_tool_fault(handle.rid, res)
+            handle.state = "resuming"
+            return
+        # anchor the resume at the intercept's virtual time, not the
+        # engine's current clock (identical for inline dispatch at the
+        # commit boundary; differs only for retries fired at plan phase)
+        self.resume(handle, res.token_ids,
+                    delay=max(0.0, (call.time + res.duration)
+                              - self.engine.now))
 
     # -- the caller's side of the intercept/resume boundary -------------
     def intercept(self, handle: SessionHandle,
@@ -351,6 +448,18 @@ class InferCeptClient:
     def finish(self, handle: SessionHandle):
         """End the session at its next sampled-token boundary."""
         handle.controller.request_finish()
+
+    def cancel(self, handle: SessionHandle, *, reason: str = "client"):
+        """Tear the session down from any lifecycle state (DESIGN.md §15):
+        queued, running, swapped, mid-swap, intercepted with an in-flight
+        tool (the result is discarded on drain), or speculating (the fork
+        is freed). Queued engine-side and applied at the next plan phase —
+        cancelling from inside an event callback is safe. The handle gets
+        a CancelledEvent; accrued byte-seconds land in the ledger's
+        ``cancelled`` cause."""
+        if handle.done:
+            return
+        self.engine.cancel_request(handle.rid, reason=reason)
 
     def resume(self, handle: SessionHandle, returned_token_ids:
                Sequence[int], *, delay: float = 0.0):

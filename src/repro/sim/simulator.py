@@ -67,6 +67,11 @@ class SimResult:
     spec_accepted: int = 0
     spec_rejected: int = 0
     spec_grafted_tokens: int = 0
+    # fault-tolerance mirror (DESIGN.md §15): sessions torn down before
+    # finishing, by cause — their accrued occupancy lands in
+    # ledger.causes["cancelled"] / ["tool_failed"]
+    cancelled: int = 0
+    failed: int = 0
     # the cause-attributed WasteLedger (DESIGN.md §13), charged with the
     # exact expressions behind waste_preserved/waste_recompute/
     # waste_swap_stall above — ledger.causes mirrors those fields
@@ -130,7 +135,21 @@ def simulate(requests: Sequence[Request], policy: PolicyConfig,
              gpu_capacity_tokens: Optional[int] = None,
              speculate: bool = False, predictor=None,
              spec_tokens: int = 32, spec_vocab: int = 50_000,
-             registry=None) -> SimResult:
+             registry=None,
+             cancel_at: Optional[Dict[int, int]] = None,
+             fail_at: Optional[Dict[int, int]] = None) -> SimResult:
+    """``cancel_at`` maps rid -> output-token threshold: once the request
+    has emitted that many tokens it is torn down as a caller cancellation.
+    ``fail_at`` maps rid -> seg_idx AT DISPATCH TIME (segment completion
+    already advanced it, so segment 0's interception is seg_idx=1 — the
+    same keying as ToolCall.seg_idx): that interception resolves as a
+    TERMINAL tool failure at its completion time instead of resuming.
+    Both mirror the engine's teardown accounting (DESIGN.md §15): accrued
+    device occupancy (context tokens * M integrated over residency, plus
+    any live speculative fork's) is charged to the matching ledger cause
+    in one lump. Retry/backoff timelines are engine-side fault POLICY,
+    not mirrored here — the simulator models outcomes, so engine<->sim
+    ledger comparisons stay meaningful at the terminal boundary."""
     if estimator is None:
         estimator = DurationEstimator(mode=policy.estimator,
                                       profiles=profiles)
@@ -152,6 +171,35 @@ def simulate(requests: Sequence[Request], policy: PolicyConfig,
     # in-flight interception [t_call, due, accum]; each iteration adds its
     # exact intersection with the pause window
     tool_windows: Dict[int, List[float]] = {}
+
+    # ---- teardown mirror (DESIGN.md §15) ----------------------------------
+    # per-request occupancy integral: device_tokens * M accumulated over
+    # every busy iteration and idle gap the context sat resident — the
+    # engine's _accrued_bs, charged in one lump only if the session is
+    # torn down (finish pops it; fault-free runs add nothing new)
+    cancel_at = dict(cancel_at or {})
+    fail_at = dict(fail_at or {})
+    accrued: Dict[int, float] = {}
+
+    def teardown(req: Request, t: float, cause: str):
+        win = tool_windows.pop(req.rid, None)
+        if win is not None:
+            # mid-pause: clamp the overlap credit at the pause actually
+            # realized and count the truncated pause as tool time
+            res.overlapped_tool_seconds += min(
+                win[2], max(0.0, t - win[0]))
+            res.tool_seconds += max(0.0, t - win[0])
+        ledger.intercept_finished(req.rid, req.decision or "none", t)
+        fork_bs = 0.0
+        fork = spec_forks.pop(req.rid, None)
+        if fork is not None:
+            fork_bs = fork["bs"]
+        sched.notify_cancelled(req, t, cause=cause)
+        ledger.charge_abandoned(cause, accrued.pop(req.rid, 0.0) + fork_bs)
+        if cause == "cancelled":
+            res.cancelled += 1
+        else:
+            res.failed += 1
 
     # ---- prefix-cache mirror (same accounting as Engine) ------------------
     cache = None
@@ -315,6 +363,15 @@ def simulate(requests: Sequence[Request], policy: PolicyConfig,
         admit(now)
         while resume_heap and resume_heap[0][0] <= now:
             t, _, req = heapq.heappop(resume_heap)
+            if req.rid not in sched.live:
+                continue          # torn down while paused; entry is stale
+            if fail_at.get(req.rid) == req.seg_idx:
+                # the tool's terminal failure surfaces at its completion
+                # time — same virtual instant the engine's fault fires
+                estimator.observe(req.current_int.kind,
+                                  max(0.0, t - req.t_call), failed=True)
+                teardown(req, t, "tool_failed")
+                continue
             res.tool_seconds += max(0.0, t - req.t_call)
             win = tool_windows.pop(req.rid, None)
             if win is not None:
@@ -342,6 +399,10 @@ def simulate(requests: Sequence[Request], policy: PolicyConfig,
                 # overlapped no serving work — pinned context there is
                 # pure tool_unoverlapped waste
                 ledger.charge_idle(gap, sched.gpu_used(), t_res <= t_arr)
+                for req in sched.live.values():
+                    if req.device_tokens:
+                        accrued[req.rid] = accrued.get(req.rid, 0.0) \
+                            + req.device_tokens * m * gap
                 if spec_forks:
                     spec_idle(gap)
             now = target
@@ -394,6 +455,12 @@ def simulate(requests: Sequence[Request], policy: PolicyConfig,
                                 plan.query_tokens,
                                 sched.paused_device_tokens(),
                                 sched.gpu_used())
+        # per-request occupancy accrual (engine _accrued_bs mirror):
+        # pre-commit device context, same observation point as the charges
+        for req in sched.live.values():
+            if req.device_tokens:
+                accrued[req.rid] = accrued.get(req.rid, 0.0) \
+                    + req.device_tokens * m * iter_time
 
         events = sched.apply_plan(plan, end)
         if cache is not None:
@@ -415,6 +482,15 @@ def simulate(requests: Sequence[Request], policy: PolicyConfig,
             heapq.heappush(resume_heap,
                            (end + intc.duration, req.rid, req))
         res.finished.extend(events["finished"])
+        for req in events["finished"]:
+            accrued.pop(req.rid, None)
+        # caller cancellations: threshold crossings observed post-commit,
+        # the same boundary the engine's queued cancels resolve at
+        for rid in [r for r, thr in cancel_at.items()
+                    if r in sched.live
+                    and sched.live[r].output_tokens >= thr]:
+            teardown(sched.live[rid], end, "cancelled")
+            del cancel_at[rid]
         # step forks LAST (engine mirror): a fork created by this
         # iteration's intercepts still piggybacks on this iteration
         if spec_forks:

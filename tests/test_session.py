@@ -254,33 +254,48 @@ def test_async_tool_runtime_does_not_stall_unrelated_sessions():
     cl.close()                                  # reclaim the pool threads
 
 
-def test_async_tool_failure_surfaces_on_engine_thread():
-    """A raising off-thread executor must surface on the engine thread
-    (poll raises with the executor error as cause) instead of dying
-    silently on a worker; the session stays paused for the caller to
-    resume or finish."""
+def test_async_tool_failure_fails_only_that_session():
+    """DESIGN.md §15: a raising off-thread executor no longer takes the
+    engine thread down. The worker's exception becomes a non-retryable
+    ToolError, the owning session ends with a FailedEvent, and a
+    co-resident session with a healthy executor drains to the exact
+    stream it produces when the poisoned session never existed."""
     cfg = get_config("llama3.2-1b", tiny=True)
-    eng = _engine(cfg, "vllm", n_pages=64)
-    cl = InferCeptClient(eng, tool_workers=1)
 
-    def bad_tool(call):
-        raise ValueError("tool exploded")
+    def run(with_poisoned: bool):
+        eng = _engine(cfg, "vllm", n_pages=64)
+        cl = InferCeptClient(eng, tool_workers=1)
 
-    def det(req, tid, now):
-        if req.output_tokens == 2 and req.seg_idx == 0:
-            return InterceptDirective("tool", 0.1, reason="detector")
-        return None
+        def bad_tool(call):
+            raise ValueError("tool exploded")
 
-    h = cl.submit(list(range(16)), detector=det, max_new_tokens=8,
-                  tools=WallClockToolExecutor(bad_tool))
-    with pytest.raises(RuntimeError) as ei:
+        def det(req, tid, now):
+            if req.output_tokens == 2 and req.seg_idx == 0:
+                return InterceptDirective("tool", 0.1, reason="detector")
+            return None
+
+        h = None
+        if with_poisoned:
+            h = cl.submit(list(range(16)), detector=det, max_new_tokens=8,
+                          tools=WallClockToolExecutor(bad_tool))
+        hb = cl.submit(list(range(30, 46)), max_new_tokens=10)
         cl.poll()
-    assert isinstance(ei.value.__cause__, ValueError)
-    assert not h.finished                   # paused, caller still owns it
-    cl.resume(h, [1])                       # caller recovers manually
-    cl.poll()
-    assert h.finished
-    cl.close()
+        stream = cl.token_ids(hb)
+        cl.close()
+        return eng, h, hb, stream
+
+    eng, h, hb, stream = run(with_poisoned=True)
+    assert h.state == "failed" and h.done and not h.finished
+    assert h.error is not None and h.error.kind == "exception"
+    assert not h.error.retryable
+    assert "tool exploded" in h.error.message
+    assert eng.counters["sessions_failed"] == 1
+    # the blast radius stops at the poisoned session
+    assert hb.finished and hb.request.output_tokens == 10
+    _, _, _, clean = run(with_poisoned=False)
+    assert stream == clean
+    # teardown reclaimed every page the failed session held
+    assert eng.ledger.causes["tool_failed"] > 0.0
 
 
 def test_resume_and_rid_guardrails():
