@@ -803,7 +803,7 @@ def bench_predictive_sweep(quick=False):
         json.dump(results, f, indent=2)
 
 
-def bench_fault_sweep(quick=False):
+def bench_fault_sweep(quick=False, sanitize=False):
     """Fault-tolerant interception (DESIGN.md §15): goodput, p99
     normalized latency, and the waste breakdown vs injected tool-fault
     rate {0, 0.1, 0.3} under the deterministic chaos harness, with one
@@ -813,7 +813,13 @@ def bench_fault_sweep(quick=False):
     exact token stream. Writes benchmarks/fault_sweep.json — a
     name->report dict whose rows carry ``causes`` +
     ``total_waste_check`` so ``repro.obs.check`` re-validates the ledger
-    invariant in CI."""
+    invariant in CI.
+
+    With ``sanitize=True`` every faulty point additionally runs under the
+    KV-page sanitizer + lifecycle checker (DESIGN.md §16): the run must
+    report ZERO findings (written to benchmarks/fault_sweep_findings.json
+    for the CI artifact when it doesn't) and its streams must be
+    bit-identical to the sanitize=False run at the same rate."""
     import json
     import os
     from repro.configs import get_config
@@ -839,10 +845,10 @@ def bench_fault_sweep(quick=False):
             return None
         return det
 
-    def run(rate):
+    def run(rate, sanitized=False):
         t0 = time.time()
         eng = Engine(cfg, POLICIES["infercept"], page_size=16, n_pages=128,
-                     max_model_len=256, seed=0)
+                     max_model_len=256, seed=0, sanitize=sanitized)
         cl = InferCeptClient(eng)
         tools = ChaosToolExecutor(
             VirtualTimeToolExecutor(cfg.vocab_size, n_tokens=4,
@@ -874,7 +880,23 @@ def bench_fault_sweep(quick=False):
     results = {}
     clean = None
     for rate in (0.0, 0.1, 0.3):
-        eng, hs, streams, wall = run(rate)
+        eng, hs, streams, wall = run(rate, sanitized=sanitize)
+        if sanitize:
+            findings = [str(f) for f in eng.sanitizer.findings]
+            if findings:
+                fout = os.path.join(
+                    os.path.dirname(os.path.abspath(__file__)),
+                    "fault_sweep_findings.json")
+                with open(fout, "w") as f:
+                    json.dump({"rate": rate, "findings": findings}, f,
+                              indent=2)
+            assert not findings, \
+                f"sanitizer findings at rate {rate}: {findings[:5]}"
+            # observation-only: the sanitized run's streams must match
+            # the plain run's bit-for-bit
+            _, _, streams_off, _ = run(rate, sanitized=False)
+            assert streams == streams_off, \
+                f"sanitize=True perturbed streams at rate {rate}"
         if rate == 0.0:
             clean = streams
         else:
@@ -971,6 +993,11 @@ def main() -> None:
                     help="run only the chaos fault-injection sweep "
                          "(goodput / p99 latency / waste vs fault rate; "
                          "alias for --only fault_sweep)")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="run the fault sweep under the KV-page sanitizer "
+                         "+ lifecycle checker (DESIGN.md §16): assert zero "
+                         "findings and streams bit-identical to the "
+                         "unsanitized run")
     args = ap.parse_args()
     if args.decode_sweep:
         args.only = "decode_sweep"
@@ -990,7 +1017,10 @@ def main() -> None:
     for fn in ALL:
         if args.only and args.only not in fn.__name__:
             continue
-        fn(quick=args.quick)
+        if fn is bench_fault_sweep:
+            fn(quick=args.quick, sanitize=args.sanitize)
+        else:
+            fn(quick=args.quick)
 
 
 if __name__ == "__main__":

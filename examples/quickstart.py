@@ -57,6 +57,11 @@ for r in reqs:
     if r.segments[-1].interception is not None:
         r.segments[-1].interception = None
 
+# Debugging a paging/lifecycle suspicion? Add sanitize=True here: every
+# plan phase then audits KV-page ownership against the allocator and
+# asserts each Request.phase transition against the lifecycle state
+# machine (DESIGN.md §16) — findings land in eng.sanitizer.findings.
+# The static companion is `python -m repro.analysis.lint src tests`.
 eng = Engine(cfg, POLICIES["infercept"], page_size=16, n_pages=64,
              max_model_len=192)
 for r in copy.deepcopy(reqs):

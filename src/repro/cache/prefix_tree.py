@@ -180,6 +180,17 @@ class PrefixCache:
         return added
 
     # ------------------------------------------------------------------
+    def pages(self):
+        """Yield every page id the cache currently holds a reference to
+        (one per indexed node). Consumed by the KV sanitizer's ownership
+        audit; walk order is unspecified."""
+        stack = list(self._root.children.values())
+        while stack:
+            n = stack.pop()
+            yield n.pid
+            stack.extend(n.children.values())
+
+    # ------------------------------------------------------------------
     def _leaves(self) -> List[_Node]:
         out, stack = [], [self._root]
         while stack:

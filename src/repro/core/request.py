@@ -236,3 +236,29 @@ class Request:
                 "ttft": None if self.first_token_time is None
                 else self.first_token_time - self.arrival,
                 "output_tokens": self.output_tokens}
+
+
+# ----------------------------------------------------------------------
+# lifecycle enforcement seam (DESIGN.md §16)
+# ----------------------------------------------------------------------
+def _phase_get(self) -> Phase:
+    return self.__dict__["_phase"]
+
+
+def _phase_set(self, new: Phase) -> None:
+    old = self.__dict__.get("_phase")
+    if old is not None and new is not old:
+        checker = self.__dict__.get("_lifecycle")
+        if checker is not None:
+            checker.on_transition(self, old, new)
+    self.__dict__["_phase"] = new
+
+
+# Installed AFTER the dataclass is created, so the generated __init__'s
+# ``self.phase = phase`` routes through the setter (old=None -> the
+# initial assignment is always legal). A checker is attached per-request
+# (``req.__dict__["_lifecycle"] = LifecycleChecker()``) only under
+# sanitize=True; the default path costs one dict lookup per phase write
+# and allocates nothing. Storage lives in ``__dict__["_phase"]`` so
+# copy/pickle/asdict keep working through the normal attribute protocol.
+Request.phase = property(_phase_get, _phase_set)

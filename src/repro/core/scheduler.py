@@ -18,7 +18,7 @@ from repro.core.estimator import DurationEstimator
 from repro.core.policy import SHORT_RUNNING_KINDS, PolicyConfig
 from repro.core.request import Interception, Phase, Request
 from repro.core.waste import min_waste_decision
-from repro.obs.metrics import MetricsRegistry
+from repro.obs.metrics import SCHED_COUNTER_SCHEMA, MetricsRegistry
 
 
 @dataclasses.dataclass
@@ -67,11 +67,9 @@ class SchedulerStats:
         (caller cancel / terminal tool failure, DESIGN.md §15)
     """
 
-    _FIELDS = ("recompute_tokens", "fresh_tokens", "decode_tokens",
-               "swapped_out_tokens", "swapped_in_tokens", "discards",
-               "preserves", "swaps", "evictions", "cache_hit_tokens",
-               "swap_in_failures", "pool_preempts", "cancellations",
-               "tool_failures")
+    # the declared schema in repro.obs.metrics is the single source of
+    # truth for these field names (shared with the static lint pass)
+    _FIELDS = SCHED_COUNTER_SCHEMA
 
     def __init__(self, registry: Optional[MetricsRegistry] = None,
                  prefix: str = "sched_"):

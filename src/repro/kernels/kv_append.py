@@ -49,7 +49,14 @@ def _append_kernel(page_ids, offsets, valid,            # scalar prefetch
         v_out[...] = v_pool_ref[...]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+# donation pairs with the pallas_call's input_output_aliases below: on
+# accelerators the pools are donated so the in-place alias never forces
+# a defensive copy; XLA-CPU cannot donate, hence the backend gate
+_DONATE_POOLS = () if jax.default_backend() == "cpu" else (0, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",),
+                   donate_argnums=_DONATE_POOLS)
 def kv_append(k_pool, v_pool, k_new, v_new, page_ids, offsets, valid, *,
               interpret=None):
     """Scatter new K/V rows into their pool page slots.

@@ -61,7 +61,13 @@ def _unpack_kernel(page_ids, pool_in_ref, staging_ref, pool_ref):
     pool_ref[...] = staging_ref[...]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+# donation pairs with swap_unpack's input_output_aliases: the pool is
+# rewritten in place on accelerators; XLA-CPU cannot donate
+_DONATE_POOL = () if jax.default_backend() == "cpu" else (0,)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",),
+                   donate_argnums=_DONATE_POOL)
 def swap_unpack(pool, staging, page_ids, *, interpret=None):
     """Scatter a staged buffer back into pool pages (returns updated pool).
 
@@ -151,7 +157,7 @@ class SwapStager:
         bounded."""
         while sum(1 for s in self._inflight
                   if s.arrays is not None) >= self.depth:
-            self._spill_oldest()
+            self._spill_oldest()  # lint: allow(dispatch-host-sync): bounded staging — depth exceeded, oldest slab's DMA must complete
         ids = jnp.asarray(page_ids, jnp.int32)
         arrays = jax.tree.map(
             lambda leaf: jnp.take(leaf, ids, axis=self.page_axis), pools)

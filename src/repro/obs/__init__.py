@@ -35,6 +35,10 @@ _EXPORTS = {
     "CounterView": "repro.obs.metrics",
     "Histogram": "repro.obs.metrics",
     "DEFAULT_TIME_EDGES": "repro.obs.metrics",
+    "ENGINE_COUNTER_SCHEMA": "repro.obs.metrics",
+    "SCHED_COUNTER_SCHEMA": "repro.obs.metrics",
+    "EXTRA_COUNTER_SCHEMA": "repro.obs.metrics",
+    "WASTE_CAUSE_SCHEMA": "repro.obs.metrics",
     "SpanTracer": "repro.obs.trace",
     "NullTracer": "repro.obs.trace",
     "WasteLedger": "repro.obs.ledger",

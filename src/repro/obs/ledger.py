@@ -61,11 +61,11 @@ from typing import Dict, List, Optional
 
 from repro.core.waste import (waste_chunked_discard, waste_preserve,
                               waste_swap)
-from repro.obs.metrics import MetricsRegistry
+from repro.obs.metrics import WASTE_CAUSE_SCHEMA, MetricsRegistry
 
-WASTE_CAUSES = ("recompute", "swap_stall", "preserve_pinned",
-                "pipeline_bubble", "tool_unoverlapped",
-                "speculation_wasted", "cancelled", "tool_failed")
+# the declared cause schema IS the ledger's cause list — one source of
+# truth shared with the static lint and the sanitize-mode fail-fast view
+WASTE_CAUSES = WASTE_CAUSE_SCHEMA
 
 
 @dataclasses.dataclass

@@ -28,6 +28,47 @@ DEFAULT_TIME_EDGES: Tuple[float, ...] = (
     0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5,
     1.0, 2.5, 5.0, 10.0, 30.0, 60.0)
 
+# ----------------------------------------------------------------------
+# declared key schemas (DESIGN.md §16)
+#
+# The single source of truth for every counter / waste-cause key the
+# stack may write. Consumed by three parties: Engine seeds its counters
+# from ENGINE_COUNTER_SCHEMA, the static lint (repro.analysis.lint)
+# rejects literal writes of undeclared keys, and CounterView fails fast
+# on undeclared runtime writes when the engine runs with sanitize=True.
+# ----------------------------------------------------------------------
+ENGINE_COUNTER_SCHEMA: Dict[str, float] = {
+    "decode_bytes": 0, "decode_tokens": 0,
+    "prefill_bytes": 0, "prefill_tokens": 0,
+    "swap_bytes": 0, "cow_bytes": 0,
+    "device_dispatches": 0, "mixed_iterations": 0,
+    "logit_bytes": 0,
+    "swap_overlap_bytes": 0,
+    "pipeline_bubbles": 0, "pipeline_bubble_s": 0.0,
+    "tool_seconds": 0.0, "overlapped_tool_seconds": 0.0,
+    "spec_forks": 0, "spec_accepted": 0, "spec_rejected": 0,
+    "spec_killed": 0, "spec_prefill_tokens": 0, "spec_decode_tokens": 0,
+    "spec_grafted_tokens": 0,
+    "tool_faults": 0, "tool_retries": 0, "tool_timeouts": 0,
+    "sessions_cancelled": 0, "sessions_failed": 0, "sessions_rejected": 0,
+}
+
+SCHED_COUNTER_SCHEMA: Tuple[str, ...] = (
+    "recompute_tokens", "fresh_tokens", "decode_tokens",
+    "swapped_out_tokens", "swapped_in_tokens",
+    "discards", "preserves", "swaps", "evictions",
+    "cache_hit_tokens", "swap_in_failures", "pool_preempts",
+    "cancellations", "tool_failures",
+)
+
+# counters written outside the two prefixed views (estimator profiles)
+EXTRA_COUNTER_SCHEMA: Tuple[str, ...] = ("estimator_profile_miss",)
+
+WASTE_CAUSE_SCHEMA: Tuple[str, ...] = (
+    "recompute", "swap_stall", "preserve_pinned", "pipeline_bubble",
+    "tool_unoverlapped", "speculation_wasted", "cancelled", "tool_failed",
+)
+
 
 class Histogram:
     """Fixed-bucket histogram. ``counts[i]`` holds observations with
@@ -79,8 +120,8 @@ class MetricsRegistry:
     def get(self, name: str, default=0):
         return self.counters.get(name, default)
 
-    def view(self, prefix: str = "") -> "CounterView":
-        return CounterView(self, prefix)
+    def view(self, prefix: str = "", schema=None) -> "CounterView":
+        return CounterView(self, prefix, schema)
 
     # -- gauges ----------------------------------------------------------
     def gauge(self, name: str, value: float):
@@ -145,13 +186,19 @@ class CounterView(MutableMapping):
     prefix. ``view[k]`` is exactly ``registry.counters[prefix + k]`` —
     same Python number objects, so ``view["x"] += 1`` preserves int
     arithmetic bit-for-bit and legacy code/tests that treat
-    ``engine.counters`` as a plain dict keep working unchanged."""
+    ``engine.counters`` as a plain dict keep working unchanged.
 
-    __slots__ = ("_reg", "_prefix")
+    With ``schema`` set (sanitize=True), writes of undeclared keys raise
+    immediately — the runtime twin of the lint rule. ``schema=None``
+    (the default) adds zero per-write overhead beyond one ``is None``."""
 
-    def __init__(self, registry: MetricsRegistry, prefix: str = ""):
+    __slots__ = ("_reg", "_prefix", "_schema")
+
+    def __init__(self, registry: MetricsRegistry, prefix: str = "",
+                 schema=None):
         self._reg = registry
         self._prefix = prefix
+        self._schema = None if schema is None else frozenset(schema)
 
     @property
     def registry(self) -> MetricsRegistry:
@@ -161,6 +208,10 @@ class CounterView(MutableMapping):
         return self._reg.counters[self._prefix + key]
 
     def __setitem__(self, key, value):
+        if self._schema is not None and key not in self._schema:
+            raise KeyError(
+                f"undeclared counter key {key!r} (prefix {self._prefix!r}) — "
+                "declare it in the repro.obs.metrics schema")
         self._reg.counters[self._prefix + key] = value
 
     def __delitem__(self, key):

@@ -121,9 +121,9 @@ class WallClockToolExecutor:
         self.min_duration = min_duration
 
     def __call__(self, call: ToolCall) -> ToolResult:
-        t0 = time.perf_counter()
+        t0 = time.perf_counter()  # lint: allow(wall-clock-rng): measured tool latency becomes the virtual pause
         ids = self.fn(call)
-        dt = time.perf_counter() - t0
+        dt = time.perf_counter() - t0  # lint: allow(wall-clock-rng): measured tool latency becomes the virtual pause
         return ToolResult(token_ids=[int(t) for t in ids],
                           duration=max(self.min_duration, dt))
 

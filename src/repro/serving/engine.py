@@ -114,7 +114,7 @@ from repro.kernels.swap_pack import SwapStager
 from repro.memory.block_manager import BlockManager
 from repro.models import LM, sample_tokens
 from repro.obs.ledger import WasteLedger
-from repro.obs.metrics import MetricsRegistry
+from repro.obs.metrics import ENGINE_COUNTER_SCHEMA, MetricsRegistry
 from repro.obs.trace import NullTracer, SpanTracer
 from repro.serving.api_executor import (AsyncToolRuntime,
                                         ScriptedToolRuntime, ToolError,
@@ -222,6 +222,7 @@ class Engine:
                  spec_tokens: int = 32,
                  max_queued: Optional[int] = None,
                  tracer: Optional[SpanTracer] = None,
+                 sanitize: bool = False,
                  dtype=jnp.float32):
         for blk in cfg.blocks:
             assert blk.kind in ("attn", "shared_attn"), \
@@ -235,6 +236,19 @@ class Engine:
         self.pools = self.model.init_cache(n_pages, page_size, dtype=dtype)
         self.blocks = BlockManager(n_pages, page_size)
         self.scratch_page = self.blocks.allocate(1)[0]  # dummy-slot target
+        # invariant enforcement (DESIGN.md §16): attached only under
+        # sanitize=True so the default path stays allocation-free (the
+        # NullTracer discipline). Created BEFORE the prefix cache below —
+        # the cache captures ``blocks.free`` as its release callback, and
+        # the sanitizer must already have wrapped it to tag cache frees.
+        self.sanitize = bool(sanitize)
+        self.sanitizer = None
+        self._lifecycle_checker = None
+        if self.sanitize:
+            from repro.analysis.lifecycle import LifecycleChecker
+            from repro.analysis.ownership import KVSanitizer
+            self.sanitizer = KVSanitizer(self)
+            self._lifecycle_checker = LifecycleChecker()
         self.cost = CostModel(cfg=cfg, chip=TPU_V5E, n_chips=1)
         cap = max(page_size, (n_pages - 8) * page_size)
         # telemetry (DESIGN.md §13): one registry spans engine + scheduler
@@ -279,6 +293,11 @@ class Engine:
         # resume) instead of after the engine drains
         self.event_sink = None
         self._prefill_emits: List[Tuple[Request, int]] = []
+        # unfused oracle paths: logits fetches + host-side sampling issued
+        # at dispatch are parked here and resolved at the commit phase's
+        # single sync point (entries: ("chunk", req, st, logits) /
+        # ("decode", reqs, logits, positions))
+        self._pending_oracle: List[tuple] = []
         # kept sorted by DESCENDING arrival: the next request to admit is
         # at the tail, so intake is one bisect + shift and admission is an
         # O(1) pop() — no O(n^2) re-sort or front-pop under bursty loads;
@@ -366,26 +385,13 @@ class Engine:
         # every read/write lands on the same registry cells the telemetry
         # dump exports, while `engine.counters[...]` keeps exact dict/int
         # semantics for legacy call sites and tests.
-        self.counters = self.metrics.view("engine_")
-        self.counters.update({
-            "decode_bytes": 0, "decode_tokens": 0,
-            "prefill_bytes": 0, "prefill_tokens": 0,
-            "swap_bytes": 0, "cow_bytes": 0,
-            "device_dispatches": 0, "mixed_iterations": 0,
-            "logit_bytes": 0,
-            "swap_overlap_bytes": 0, "pipeline_bubbles": 0,
-            "pipeline_bubble_s": 0.0,
-            "tool_seconds": 0.0, "overlapped_tool_seconds": 0.0,
-            # speculation (§14): fork work lands in dedicated counters —
-            # decode/prefill bytes keep their per-REAL-token semantics
-            "spec_forks": 0, "spec_accepted": 0, "spec_rejected": 0,
-            "spec_killed": 0, "spec_prefill_tokens": 0,
-            "spec_decode_tokens": 0, "spec_grafted_tokens": 0,
-            # fault tolerance (§15): tool faults observed / retries
-            # launched / timeouts fired, and terminal session outcomes
-            "tool_faults": 0, "tool_retries": 0, "tool_timeouts": 0,
-            "sessions_cancelled": 0, "sessions_failed": 0,
-            "sessions_rejected": 0})
+        # Keys come from the declared schema (repro.obs.metrics), the
+        # same one the static lint enforces; under sanitize=True the view
+        # fails fast on any undeclared write.
+        self.counters = self.metrics.view(
+            "engine_", schema=ENGINE_COUNTER_SCHEMA if self.sanitize
+            else None)
+        self.counters.update(ENGINE_COUNTER_SCHEMA)
         # rid -> (t_start, phase) while a request sits in a wait state
         # (queued after admission / swapped_wait after a swap-out resume);
         # closed into a span + wait histogram at its next compute
@@ -480,6 +486,8 @@ class Engine:
                 toks = list(map(int, prompt_token_ids(
                     req.rid, req.prompt_len, self.cfg.vocab_size)))
             self.kv[req.rid] = ReqKV(tokens=toks, pages=[])
+            if self._lifecycle_checker is not None:
+                req.__dict__["_lifecycle"] = self._lifecycle_checker
             self.sched.submit(req)
             self._wait_marks[req.rid] = (req.arrival, "queued")
 
@@ -1433,17 +1441,18 @@ class Engine:
         self.counters["prefill_tokens"] += n
         self.counters["device_dispatches"] += 1
         st.computed = start + n
-        # final chunk of a fresh prefill emits the first generated token
+        # final chunk of a fresh prefill emits the first generated token —
+        # but the logits fetch + host-side sampling are DEFERRED to the
+        # commit phase (issue-only dispatch, DESIGN.md §12): nothing reads
+        # st.tokens / _prefill_emits before commit, so the stream is
+        # bit-identical while staged swap DMA drains behind the fetch
         if st.computed == req.target_ctx and len(st.tokens) == req.target_ctx:
-            row = np.asarray(jax.device_get(logits[0]))
-            self.counters["logit_bytes"] += row.nbytes
-            tid = self._sample_row(
-                req, row.reshape(-1, self.cfg.vocab_size)[-1], st.computed)
-            st.tokens.append(tid)
-            self._prefill_emits.append((req, tid))
+            self._pending_oracle.append(("chunk", req, st, logits))
         if st.computed == req.target_ctx:
             # prefill/recompute complete: publish the context so concurrent
             # same-prefix requests can hit before this one even finishes
+            # (indexes only full pages below st.computed — independent of
+            # the deferred sampled-token append)
             self._register_in_cache(st)
 
     def _exec_decode(self, reqs: List[Request]):
@@ -1490,14 +1499,13 @@ class Engine:
                 * self.kv_token_bytes
         self.counters["decode_tokens"] += B
         self.counters["device_dispatches"] += 1
-        # the full B_pad x vocab logits cross the host boundary here —
-        # the per-step sync the fused path's on-device sampling removes
-        arr = np.asarray(jax.device_get(logits))
-        self.counters["logit_bytes"] += arr.nbytes
-        self._decode_ids = [
-            self._sample_row(r, arr[b].reshape(-1, self.cfg.vocab_size)[-1],
-                             int(pos[b]) + 1)
-            for b, r in enumerate(reqs)]
+        # the full B_pad x vocab logits still cross the host boundary (the
+        # per-step cost the fused path's on-device sampling removes), but
+        # the fetch + sampling are DEFERRED to commit so dispatch stays
+        # issue-only; _decode_ids is not read until the commit boundary
+        # consults, so values and ordering are unchanged
+        self._pending_oracle.append(
+            ("decode", list(reqs), logits, [int(p) for p in pos[:B]]))
         for st, p in zip(sts, pos[:B]):
             st.computed = int(p) + 1
 
@@ -1915,6 +1923,9 @@ class Engine:
         matching, the scheduler's iteration plan, and page-aligning its
         token-granular swap amounts. Pure host bookkeeping — nothing is
         dispatched to the device yet."""
+        if self.sanitizer is not None:
+            # safe point: post-commit state is stable, audit ownership
+            self.sanitizer.audit("plan")
         self._admit()
         self._prefill_emits = []
         # fault machinery (§15) runs at this safe point, in dependency
@@ -2047,7 +2058,7 @@ class Engine:
             if self.overlap:
                 inflight.swap_out.append((req, ticket))
             else:
-                self._complete_swap_out(req, ticket)
+                self._complete_swap_out(req, ticket)  # lint: allow(dispatch-host-sync): serial oracle (overlap=False) completes DMA inline
         ok_in = []
         for req, n in plan.swap_in:
             if self._exec_swap_in(req):
@@ -2061,12 +2072,15 @@ class Engine:
                 self._swap_in_failed(req)
         plan.swap_in = ok_in
         self._back_plan(plan)
+        if self.sanitizer is not None:
+            # every page this plan writes must now be live + exclusive
+            self.sanitizer.check_plan(plan)
         if plan.chunks or plan.decode:
             self.counters["mixed_iterations"] += 1
         if self.fused:
             inflight.mixed = self._dispatch_mixed(plan)
             if not self.overlap and inflight.mixed is not None:
-                self._commit_mixed(*inflight.mixed)
+                self._commit_mixed(*inflight.mixed)  # lint: allow(dispatch-host-sync): serial oracle (overlap=False) syncs inline
                 inflight.mixed = None
         else:
             # per-call oracle paths sample host-side: their logits fetch
@@ -2076,6 +2090,33 @@ class Engine:
                 self._exec_chunk(req, n)
             self._exec_decode(plan.decode)
         return inflight
+
+    def _commit_oracle(self):
+        """Resolve the unfused paths' deferred logits fetches at the
+        commit sync point, in dispatch order (chunks before decode —
+        a request never has both in one plan), reproducing the values,
+        sampling positions, and logit_bytes accounting of the legacy
+        inline fetches bit-for-bit."""
+        pending, self._pending_oracle = self._pending_oracle, []
+        for entry in pending:
+            if entry[0] == "chunk":
+                _, req, st, logits = entry
+                row = np.asarray(jax.device_get(logits[0]))
+                self.counters["logit_bytes"] += row.nbytes
+                tid = self._sample_row(
+                    req, row.reshape(-1, self.cfg.vocab_size)[-1],
+                    st.computed)
+                st.tokens.append(tid)
+                self._prefill_emits.append((req, tid))
+            else:
+                _, reqs, logits, pos = entry
+                arr = np.asarray(jax.device_get(logits))
+                self.counters["logit_bytes"] += arr.nbytes
+                self._decode_ids = [
+                    self._sample_row(
+                        r, arr[b].reshape(-1, self.cfg.vocab_size)[-1],
+                        pos[b] + 1)
+                    for b, r in enumerate(reqs)]
 
     def _commit_phase(self, plan, inflight: StepInflight):
         """COMMIT: the single host-sync point of the step. Fetch the fused
@@ -2088,6 +2129,8 @@ class Engine:
         two paths are bit-identical."""
         if inflight.mixed is not None:
             self._commit_mixed(*inflight.mixed)
+        if self._pending_oracle:
+            self._commit_oracle()
         for req, ticket in inflight.swap_out:
             self._complete_swap_out(req, ticket)
 

@@ -137,7 +137,8 @@ def simulate(requests: Sequence[Request], policy: PolicyConfig,
              spec_tokens: int = 32, spec_vocab: int = 50_000,
              registry=None,
              cancel_at: Optional[Dict[int, int]] = None,
-             fail_at: Optional[Dict[int, int]] = None) -> SimResult:
+             fail_at: Optional[Dict[int, int]] = None,
+             sanitize: bool = False) -> SimResult:
     """``cancel_at`` maps rid -> output-token threshold: once the request
     has emitted that many tokens it is torn down as a caller cancellation.
     ``fail_at`` maps rid -> seg_idx AT DISPATCH TIME (segment completion
@@ -354,9 +355,21 @@ def simulate(requests: Sequence[Request], policy: PolicyConfig,
         res.spec_grafted_tokens += k
         return True
 
+    # lifecycle enforcement (DESIGN.md §16): the simulator drives the
+    # same Request.phase seam as the engine, so sanitize=True asserts
+    # every scheduler-side transition here too; off by default, free
+    if sanitize:
+        from repro.analysis.lifecycle import LifecycleChecker
+        lifecycle_checker = LifecycleChecker()
+    else:
+        lifecycle_checker = None
+
     def admit(upto: float):
         while arrivals and arrivals[0].arrival <= upto:
-            sched.submit(arrivals.popleft())
+            req = arrivals.popleft()
+            if lifecycle_checker is not None:
+                req.__dict__["_lifecycle"] = lifecycle_checker
+            sched.submit(req)
 
     while (arrivals or sched.has_work()) and now < max_time \
             and iters < max_iters:
