@@ -934,6 +934,106 @@ def bench_fault_sweep(quick=False, sanitize=False):
         json.dump(results, f, indent=2)
 
 
+def bench_quant_sweep(quick=False):
+    """Quantized KV pages (DESIGN.md §17): per-kv_dtype capacity and
+    fidelity vs the fp32 pools on the agent workload.
+
+    Per dtype: physical bytes/resident-token (per-page scale leaves
+    priced in), max co-resident sessions at a FIXED byte pool (the fp32
+    pool's physical size), per-page swap slab bytes (payload + scales,
+    one contiguous DMA), run swap traffic, and the greedy-stream
+    agreement rate vs the fp32 baseline at matched (rid, position) —
+    exact equality is impossible under requantize-on-append, so the rate
+    quantifies the bounded divergence. Every row carries ``causes`` +
+    ``total_waste_check`` so ``repro.obs.check`` re-validates the ledger
+    invariant in CI. Writes benchmarks/quant_sweep.json."""
+    import json
+    import os
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.core import POLICIES
+    from repro.serving.engine import Engine
+    from repro.serving.workloads import make_agent_workload
+    cfg = get_config("llama3.2-1b", tiny=True)
+    n_sessions = 2 if quick else 4
+    reqs = make_agent_workload(
+        seed=5, n_sessions=n_sessions, rate_rps=2.0, vocab=cfg.vocab_size,
+        n_templates=2, system_prompt_len=50, turns=(2, 2), turn_gap_s=3.0,
+        hist_per_turn=12, prefix_share=0.75, gen_tokens=(8, 3),
+        final_gen=(8, 3), ret_tokens=(6, 2), max_tool_calls=2, max_ctx=240)
+    max_ctx, n_pages, page = 256, 128, 16
+
+    def run(kv_dtype):
+        t0 = time.time()
+        eng = Engine(cfg, POLICIES["infercept"], page_size=page,
+                     n_pages=n_pages, max_model_len=max_ctx, seed=0,
+                     paged=True, fused=True, prefix_cache=True,
+                     kv_dtype=kv_dtype)
+        for r in copy.deepcopy(reqs):
+            eng.add_request(r)
+        fin = eng.run()
+        assert len(fin) == len(reqs), kv_dtype
+        streams = {r.rid: eng.generated_text(r) for r in fin}
+        return eng, streams, time.time() - t0
+
+    def slab_bytes(eng):
+        # bytes one page moves through swap_pack: payload + scale leaves
+        return int(sum(int(leaf.nbytes) // leaf.shape[1]
+                       for leaf in jax.tree.leaves(eng.pools)))
+
+    def agreement(streams, baseline):
+        num = den = 0
+        for rid, s in streams.items():
+            b = baseline[rid]
+            n = min(len(s), len(b))
+            num += sum(1 for i in range(n) if s[i] == b[i])
+            den += max(len(s), len(b))
+        return num / max(1, den)
+
+    base_eng, base_streams, base_wall = run(None)
+    fixed_pool_bytes = base_eng.kv_token_bytes * n_pages * page
+    results = {}
+    for name in (None, "int8", "float8_e4m3", "float8_e5m2"):
+        eng, streams, wall = (base_eng, base_streams, base_wall) \
+            if name is None else run(name)
+        tokens_at_fixed_pool = fixed_pool_bytes // eng.kv_token_bytes
+        row = {
+            "kv_dtype": name or "float32",
+            "bytes_per_resident_token": eng.kv_token_bytes,
+            "bytes_reduction_vs_fp32": round(
+                base_eng.kv_token_bytes / eng.kv_token_bytes, 3),
+            "swap_slab_bytes_per_page": slab_bytes(eng),
+            "slab_reduction_vs_fp32": round(
+                slab_bytes(base_eng) / slab_bytes(eng), 3),
+            "max_coresident_sessions_fixed_pool":
+                int(tokens_at_fixed_pool // max_ctx),
+            "swap_bytes": eng.counters["swap_bytes"],
+            "scale_reset_pages":
+                eng.counters["kv_quant_scale_reset_pages"],
+            "stream_agreement_vs_fp32": round(
+                agreement(streams, base_streams), 4),
+            "waste_fraction": round(eng.ledger.waste_fraction(), 4),
+            "causes": dict(eng.ledger.causes),
+            "total_waste_check": eng.ledger.total_check,
+        }
+        results[row["kv_dtype"]] = row
+        _row(f"quant_sweep_{row['kv_dtype']}",
+             wall / max(1, n_sessions) * 1e6,
+             {k: v for k, v in row.items()
+              if k not in ("causes", "total_waste_check")})
+        if name is not None:
+            assert 2 * eng.kv_token_bytes <= base_eng.kv_token_bytes, \
+                f"{name}: quantized pools must at least halve KV bytes"
+            assert 2 * slab_bytes(eng) <= slab_bytes(base_eng), name
+
+    out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "quant_sweep.json")
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2)
+
+
 def bench_multi_gpu_scaling(quick=False):
     """13B on 1 vs 2 GPUs, 70B on 4 (paper §5.1: distributed setting gains
     grow because more HBM per GPU is left for KV)."""
@@ -963,7 +1063,7 @@ ALL = [bench_table1_workload, bench_fig2_end2end, bench_fig3_breakdown,
        bench_kernels, bench_multi_gpu_scaling, bench_prefix_cache_sweep,
        bench_decode_sweep, bench_mixed_sweep, bench_serve_sweep,
        bench_overlap_sweep, bench_waste_trace, bench_predictive_sweep,
-       bench_fault_sweep]
+       bench_fault_sweep, bench_quant_sweep]
 
 
 def main() -> None:
@@ -993,6 +1093,11 @@ def main() -> None:
                     help="run only the chaos fault-injection sweep "
                          "(goodput / p99 latency / waste vs fault rate; "
                          "alias for --only fault_sweep)")
+    ap.add_argument("--quant-sweep", action="store_true",
+                    help="run only the quantized-KV capacity/fidelity "
+                         "sweep (bytes per resident token, swap slab "
+                         "bytes, stream agreement per kv_dtype; alias "
+                         "for --only quant_sweep)")
     ap.add_argument("--sanitize", action="store_true",
                     help="run the fault sweep under the KV-page sanitizer "
                          "+ lifecycle checker (DESIGN.md §16): assert zero "
@@ -1013,6 +1118,8 @@ def main() -> None:
         args.only = "predictive_sweep"
     if args.fault_sweep:
         args.only = "fault_sweep"
+    if args.quant_sweep:
+        args.only = "quant_sweep"
     print("name,us_per_call,derived")
     for fn in ALL:
         if args.only and args.only not in fn.__name__:

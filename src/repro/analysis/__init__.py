@@ -29,7 +29,7 @@ from typing import Optional
 class Finding:
     """One detected invariant violation, with enough context to act on."""
 
-    kind: str                  # leak | double_free | use_after_free | cow_violation
+    kind: str   # leak | double_free | use_after_free | cow_violation | stale_scale
     rid: Optional[str]         # owning request id, when attributable
     page: Optional[int]        # page id, when attributable
     site: str                  # safe point or call site that detected it

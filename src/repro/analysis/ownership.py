@@ -139,6 +139,22 @@ class KVSanitizer:
                                 f"{self.generation[page]}) under owner {lab}"),
                     ))
         self._seen = seen_now
+        self._audit_scales(site)
+
+    def _audit_scales(self, site: str) -> None:
+        """Quantized pools only: the freed => zero-scales invariant
+        (DESIGN.md §17). A freed-and-recyclable page whose k/v scale rows
+        are still nonzero would silently re-quantize the next owner's
+        tokens against the previous owner's dynamic range."""
+        eng = self.engine
+        if getattr(eng, "kv_dtype", None) is None:
+            return
+        for page in eng._stale_scale_pages():
+            self.findings.append(Finding(
+                kind="stale_scale", rid=None, page=int(page), site=site,
+                detail=(f"freed page {page} retains nonzero quantization "
+                        "scales — scale lifetime must equal page lifetime"),
+            ))
 
     # ------------------------------------------------------------------
     # dispatch-time write validation

@@ -11,6 +11,7 @@ roofline (compute vs HBM), so the identical object serves:
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 from repro.configs.base import ModelConfig
 from repro.core.waste import overlap_stall
@@ -26,6 +27,12 @@ class CostModel:
     eff_hbm: float = 0.75         # achievable fraction of peak bandwidth
     fixed_overhead_s: float = 2e-4  # dispatch/launch floor per iteration
     weight_dtype: str = "bfloat16"
+    # KV pool storage dtype when it differs from the weights (quantized
+    # pools, DESIGN.md §17). None = KV stored at weight_dtype, the
+    # historical assumption. Halving M shifts every Eq. 4/5 pivot: swap
+    # budgets (swap_tokens_within), T_swap, kv_capacity_tokens, and the
+    # byte-seconds the WasteLedger prices all follow m_bytes.
+    kv_dtype: Optional[str] = None
     # Profiled floor for the saturation point: the pure weights-read/compute
     # crossover underestimates S because weight streaming overlaps compute;
     # measured chunked-prefill sweet spots sit around 512 query tokens
@@ -35,8 +42,12 @@ class CostModel:
     # ---- derived ---------------------------------------------------------
     @property
     def m_bytes(self) -> int:
-        """Per-token KV bytes, the paper's M."""
-        return self.cfg.kv_token_bytes(dtype_bytes(self.weight_dtype))
+        """Per-token KV bytes, the paper's M (kv-dtype-aware: quantized
+        pools store K/V at 1 byte/elem; the per-page scale overhead is
+        amortized below 1% per token at page_size >= 8 and is carried by
+        the engine's physical ``kv_token_bytes``, not the analytic M)."""
+        return self.cfg.kv_token_bytes(
+            dtype_bytes(self.kv_dtype or self.weight_dtype))
 
     @property
     def weight_bytes(self) -> float:

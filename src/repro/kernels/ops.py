@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.kv_append import kv_append
+from repro.kernels.kv_quant import kv_append_quant
 from repro.kernels.paged_attention import paged_attention
 from repro.kernels.ragged_paged_attention import ragged_paged_attention
 from repro.kernels.gla_scan import gla_scan
@@ -21,9 +22,11 @@ from repro.kernels.swap_pack import swap_pack, swap_unpack
 
 __all__ = ["flash_attention_op", "paged_attention_op",
            "ragged_paged_attention_op", "kv_append_op",
+           "kv_append_quant_op",
            "swap_pack_op", "swap_unpack_op", "gla_scan_op",
            "flash_attention", "paged_attention", "ragged_paged_attention",
-           "kv_append", "swap_pack", "swap_unpack", "gla_scan"]
+           "kv_append", "kv_append_quant", "swap_pack", "swap_unpack",
+           "gla_scan"]
 
 
 def gla_scan_op(q, k, v, log_a, *, chunk=128, use_pallas=None,
@@ -49,28 +52,40 @@ def flash_attention_op(q, k, v, *, causal=True, window=None, softcap=None,
 
 
 def paged_attention_op(q, k_pool, v_pool, block_tables, ctx_lens, *,
+                       k_scale=None, v_scale=None,
                        softcap=None, window=None, use_pallas=None,
                        interpret=None):
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
     if use_pallas:
         return paged_attention(q, k_pool, v_pool, block_tables, ctx_lens,
+                               k_scale=k_scale, v_scale=v_scale,
                                softcap=softcap, window=window,
                                interpret=interpret)
+    if k_scale is not None:
+        return ref.paged_attention_quant_ref(
+            q, k_pool, v_pool, k_scale, v_scale, block_tables, ctx_lens,
+            softcap=softcap, window=window)
     return ref.paged_attention_ref(q, k_pool, v_pool, block_tables, ctx_lens,
                                    softcap=softcap, window=window)
 
 
 def ragged_paged_attention_op(q, k_pool, v_pool, block_tables, tok_seq,
-                              tok_pos, *, softcap=None, window=None,
+                              tok_pos, *, k_scale=None, v_scale=None,
+                              softcap=None, window=None,
                               use_pallas=None, interpret=None):
     """Mixed-batch ragged-query attention (chunk + decode tokens flattened)."""
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
     if use_pallas:
         return ragged_paged_attention(q, k_pool, v_pool, block_tables,
-                                      tok_seq, tok_pos, softcap=softcap,
+                                      tok_seq, tok_pos, k_scale=k_scale,
+                                      v_scale=v_scale, softcap=softcap,
                                       window=window, interpret=interpret)
+    if k_scale is not None:
+        return ref.ragged_paged_attention_quant_ref(
+            q, k_pool, v_pool, k_scale, v_scale, block_tables, tok_seq,
+            tok_pos, softcap=softcap, window=window)
     return ref.ragged_paged_attention_ref(q, k_pool, v_pool, block_tables,
                                           tok_seq, tok_pos, softcap=softcap,
                                           window=window)
@@ -86,6 +101,23 @@ def kv_append_op(k_pool, v_pool, k_new, v_new, page_ids, offsets, valid, *,
                          valid, interpret=interpret)
     return ref.kv_append_ref(k_pool, v_pool, k_new, v_new, page_ids,
                              offsets, valid)
+
+
+def kv_append_quant_op(k_pool, v_pool, k_scale, v_scale, k_new, v_new,
+                       page_ids, offsets, valid, *, discard_pid=None,
+                       use_pallas=None, interpret=None):
+    """Quantized in-place scatter of new token K/V rows + per-page scale
+    update (requantize-on-append; DESIGN.md §17). ``discard_pid`` is
+    required on the Pallas path (kv_append's write-discard contract);
+    the XLA path drops invalid rows by OOB scatter and ignores it."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return kv_append_quant(k_pool, v_pool, k_scale, v_scale, k_new,
+                               v_new, page_ids, offsets, valid, discard_pid,
+                               interpret=interpret)
+    return ref.kv_append_quant_ref(k_pool, v_pool, k_scale, v_scale, k_new,
+                                   v_new, page_ids, offsets, valid)
 
 
 def swap_pack_op(pool, page_ids, *, use_pallas=None, interpret=None):

@@ -26,8 +26,16 @@ NEG_INF = -1e30
 
 
 def _paged_kernel(block_tables, ctx_lens,          # scalar-prefetch operands
-                  q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
-                  page: int, softcap, scale, window):
+                  q_ref, k_ref, v_ref, *rest,
+                  page: int, softcap, scale, window, quant: bool = False):
+    # quantized pools (DESIGN.md §17) carry one f32 scale per (page, kv
+    # head); its (1, 1) block rides the same scalar-prefetch indirection
+    # as the payload page, and K/V are dequantized in-register — the fp32
+    # pool never materializes
+    if quant:
+        ks_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        o_ref, acc_ref, m_ref, l_ref = rest
     b = pl.program_id(0)
     i = pl.program_id(2)
     n = pl.num_programs(2)
@@ -51,6 +59,9 @@ def _paged_kernel(block_tables, ctx_lens,          # scalar-prefetch operands
         q = q_ref[0, 0].astype(jnp.float32)               # (G, hd)
         k = k_ref[0, :, 0].astype(jnp.float32)            # (page, hd)
         v = v_ref[0, :, 0].astype(jnp.float32)
+        if quant:
+            k = k * ks_ref[0, 0]
+            v = v * vs_ref[0, 0]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         if softcap is not None:
@@ -80,32 +91,42 @@ def _paged_kernel(block_tables, ctx_lens,          # scalar-prefetch operands
                    static_argnames=("softcap", "scale", "window",
                                     "interpret"))
 def paged_attention(q, k_pool, v_pool, block_tables, ctx_lens, *,
+                    k_scale=None, v_scale=None,
                     softcap=None, scale=None, window=None, interpret=None):
     """q: (B, Hkv, G, hd); pools: (n_pages, page, Hkv, hd);
     block_tables: (B, max_pages); ctx_lens: (B,). ``window`` (static) keeps
     only the last ``window`` positions of each context (sliding-window
     attention); rows with ctx_lens == 0 produce garbage (padding rows).
-    Returns (B, Hkv, G, hd)."""
+    ``k_scale``/``v_scale`` (n_pages, Hkv) f32 dequantize low-bit pools
+    in-register (both set or both None). Returns (B, Hkv, G, hd)."""
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     B, Hkv, G, hd = q.shape
     n_pages, page, _, _ = k_pool.shape
     max_pages = block_tables.shape[1]
     scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    quant = k_scale is not None
 
     kernel = functools.partial(_paged_kernel, page=page, softcap=softcap,
-                               scale=scale, window=window)
+                               scale=scale, window=window, quant=quant)
+    pool_spec = pl.BlockSpec((1, page, 1, hd),
+                             lambda b, h, i, bt, cl: (bt[b, i], 0, h, 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, G, hd),
+                     lambda b, h, i, bt, cl: (b, h, 0, 0)),
+        pool_spec,
+        pool_spec,
+    ]
+    operands = [q, k_pool, v_pool]
+    if quant:
+        scale_spec = pl.BlockSpec((1, 1),
+                                  lambda b, h, i, bt, cl: (bt[b, i], h))
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, Hkv, max_pages),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, hd),
-                         lambda b, h, i, bt, cl: (b, h, 0, 0)),
-            pl.BlockSpec((1, page, 1, hd),
-                         lambda b, h, i, bt, cl: (bt[b, i], 0, h, 0)),
-            pl.BlockSpec((1, page, 1, hd),
-                         lambda b, h, i, bt, cl: (bt[b, i], 0, h, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, G, hd),
                                lambda b, h, i, bt, cl: (b, h, 0, 0)),
         scratch_shapes=[
@@ -118,4 +139,4 @@ def paged_attention(q, k_pool, v_pool, block_tables, ctx_lens, *,
         kernel, grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         interpret=interpret,
-    )(block_tables, ctx_lens, q, k_pool, v_pool)
+    )(block_tables, ctx_lens, *operands)

@@ -39,8 +39,14 @@ NEG_INF = -1e30
 
 
 def _ragged_kernel(block_tables, tok_seq, tok_pos,  # scalar-prefetch operands
-                   q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
-                   page: int, softcap, scale, window):
+                   q_ref, k_ref, v_ref, *rest,
+                   page: int, softcap, scale, window, quant: bool = False):
+    # quantized pools (DESIGN.md §17): per-(page, kv head) f32 scales ride
+    # the same scalar-prefetch indirection; dequant happens in-register
+    if quant:
+        ks_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        o_ref, acc_ref, m_ref, l_ref = rest
     del block_tables, tok_seq
     n = pl.program_id(0)
     i = pl.program_id(2)
@@ -65,6 +71,9 @@ def _ragged_kernel(block_tables, tok_seq, tok_pos,  # scalar-prefetch operands
         q = q_ref[0, 0].astype(jnp.float32)               # (G, hd)
         k = k_ref[0, :, 0].astype(jnp.float32)            # (page, hd)
         v = v_ref[0, :, 0].astype(jnp.float32)
+        if quant:
+            k = k * ks_ref[0, 0]
+            v = v * vs_ref[0, 0]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         if softcap is not None:
@@ -94,34 +103,45 @@ def _ragged_kernel(block_tables, tok_seq, tok_pos,  # scalar-prefetch operands
                    static_argnames=("softcap", "scale", "window",
                                     "interpret"))
 def ragged_paged_attention(q, k_pool, v_pool, block_tables, tok_seq,
-                           tok_pos, *, softcap=None, scale=None, window=None,
+                           tok_pos, *, k_scale=None, v_scale=None,
+                           softcap=None, scale=None, window=None,
                            interpret=None):
     """q: (N, Hkv, G, hd) flat mixed-batch query tokens; pools:
     (n_pages, page, Hkv, hd); block_tables: (B, max_pages); tok_seq (N,)
     int32 names each token's sequence (block-table row); tok_pos (N,) int32
     is its absolute position (-1 marks a padded token row — output zeros).
     ``window`` (static) keeps only the last ``window`` positions visible.
-    Returns (N, Hkv, G, hd)."""
+    ``k_scale``/``v_scale`` (n_pages, Hkv) f32 dequantize low-bit pools
+    in-register (both set or both None). Returns (N, Hkv, G, hd)."""
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     N, Hkv, G, hd = q.shape
     n_pages, page, _, _ = k_pool.shape
     max_pages = block_tables.shape[1]
     scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    quant = k_scale is not None
 
     kernel = functools.partial(_ragged_kernel, page=page, softcap=softcap,
-                               scale=scale, window=window)
+                               scale=scale, window=window, quant=quant)
+    pool_spec = pl.BlockSpec(
+        (1, page, 1, hd),
+        lambda n, h, i, bt, ts, tp: (bt[ts[n], i], 0, h, 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, G, hd),
+                     lambda n, h, i, bt, ts, tp: (n, h, 0, 0)),
+        pool_spec,
+        pool_spec,
+    ]
+    operands = [q, k_pool, v_pool]
+    if quant:
+        scale_spec = pl.BlockSpec(
+            (1, 1), lambda n, h, i, bt, ts, tp: (bt[ts[n], i], h))
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(N, Hkv, max_pages),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, hd),
-                         lambda n, h, i, bt, ts, tp: (n, h, 0, 0)),
-            pl.BlockSpec((1, page, 1, hd),
-                         lambda n, h, i, bt, ts, tp: (bt[ts[n], i], 0, h, 0)),
-            pl.BlockSpec((1, page, 1, hd),
-                         lambda n, h, i, bt, ts, tp: (bt[ts[n], i], 0, h, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, G, hd),
                                lambda n, h, i, bt, ts, tp: (n, h, 0, 0)),
         scratch_shapes=[
@@ -134,4 +154,4 @@ def ragged_paged_attention(q, k_pool, v_pool, block_tables, tok_seq,
         kernel, grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         interpret=interpret,
-    )(block_tables, tok_seq, tok_pos, q, k_pool, v_pool)
+    )(block_tables, tok_seq, tok_pos, *operands)

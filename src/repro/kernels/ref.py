@@ -31,20 +31,28 @@ def flash_attention_ref(q, k, v, *, causal=True, window=None,
 
 
 def paged_attention_ref(q, kv_pages_k, kv_pages_v, block_tables, ctx_lens, *,
-                        softcap=None, scale=None, window=None):
+                        softcap=None, scale=None, window=None,
+                        _k=None, _v=None):
     """Decode attention over a paged KV pool.
 
     q: (B, Hkv, G, hd); pools: (n_pages, page, Hkv, hd);
     block_tables: (B, max_pages) int32; ctx_lens: (B,) tokens valid.
     ``window`` keeps only the last ``window`` positions of each context.
+    ``_k``/``_v`` bypass the pool gather with pre-gathered (B, S, Hkv, hd)
+    caches (the dequantized view the quant oracle hands in).
     """
     B, Hkv, G, hd = q.shape
-    page = kv_pages_k.shape[1]
-    max_pages = block_tables.shape[1]
-    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
-    # gather to (B, max_pages*page, Hkv, hd)
-    k = kv_pages_k[block_tables].reshape(B, max_pages * page, Hkv, hd)
-    v = kv_pages_v[block_tables].reshape(B, max_pages * page, Hkv, hd)
+    if _k is not None:
+        k, v = _k, _v
+        max_pages, page = block_tables.shape[1], k.shape[1] // block_tables.shape[1]
+        scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    else:
+        page = kv_pages_k.shape[1]
+        max_pages = block_tables.shape[1]
+        scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+        # gather to (B, max_pages*page, Hkv, hd)
+        k = kv_pages_k[block_tables].reshape(B, max_pages * page, Hkv, hd)
+        v = kv_pages_v[block_tables].reshape(B, max_pages * page, Hkv, hd)
     s = jnp.einsum("bhgd,bshd->bhgs", q.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale
     if softcap is not None:
@@ -61,7 +69,7 @@ def paged_attention_ref(q, kv_pages_k, kv_pages_v, block_tables, ctx_lens, *,
 
 def ragged_paged_attention_ref(q, kv_pages_k, kv_pages_v, block_tables,
                                tok_seq, tok_pos, *, softcap=None, scale=None,
-                               window=None):
+                               window=None, _k=None, _v=None):
     """Ragged-query attention over a paged KV pool (mixed-batch oracle).
 
     q: (N, Hkv, G, hd) flat tokens; pools: (n_pages, page, Hkv, hd);
@@ -69,14 +77,21 @@ def ragged_paged_attention_ref(q, kv_pages_k, kv_pages_v, block_tables,
     block-table row; tok_pos (N,) its absolute position (-1 = padded row,
     output garbage). Token i sees kv positions <= tok_pos[i] of its own
     sequence only; ``window`` keeps the last ``window`` of those.
+    ``_k``/``_v`` bypass the pool gather with pre-gathered (N, S, Hkv, hd)
+    caches (the dequantized view the quant oracle hands in).
     """
     N, Hkv, G, hd = q.shape
-    page = kv_pages_k.shape[1]
-    max_pages = block_tables.shape[1]
     scale = scale if scale is not None else 1.0 / math.sqrt(hd)
-    bt = block_tables[tok_seq]                           # (N, max_pages)
-    k = kv_pages_k[bt].reshape(N, max_pages * page, Hkv, hd)
-    v = kv_pages_v[bt].reshape(N, max_pages * page, Hkv, hd)
+    if _k is not None:
+        k, v = _k, _v
+        max_pages = block_tables.shape[1]
+        page = k.shape[1] // max_pages
+    else:
+        page = kv_pages_k.shape[1]
+        max_pages = block_tables.shape[1]
+        bt = block_tables[tok_seq]                       # (N, max_pages)
+        k = kv_pages_k[bt].reshape(N, max_pages * page, Hkv, hd)
+        v = kv_pages_v[bt].reshape(N, max_pages * page, Hkv, hd)
     s = jnp.einsum("bhgd,bshd->bhgs", q.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale
     if softcap is not None:
@@ -104,6 +119,90 @@ def kv_append_ref(k_pool, v_pool, k_new, v_new, page_ids, offsets, valid):
     v_pool = v_pool.at[pids, offsets].set(v_new.astype(v_pool.dtype),
                                           mode="drop")
     return k_pool, v_pool
+
+
+def kv_append_quant_ref(k_pool, v_pool, k_scale, v_scale, k_new, v_new,
+                        page_ids, offsets, valid):
+    """Quantized scatter of new K/V rows (kv_append_quant oracle).
+
+    Pools: (n_pages, page, Hkv, hd) quantized storage dtype; scales:
+    (n_pages, Hkv) f32. Same three phases as the Pallas composite —
+    monotone per-(page, head) scale update, whole-page requant of every
+    touched page, then the row scatter with the new rows quantized at the
+    post-update scales — expressed as drop-mode XLA gathers/scatters.
+    Duplicate page ids in one call scatter identical requanted payloads,
+    so the unordered scatter is safe. Returns (k_pool, v_pool, k_scale,
+    v_scale)."""
+    from repro.kernels.kv_quant import (kv_quant_qmax, quantize_rows,
+                                        requant_payload,
+                                        updated_page_scales)
+    n_pages = k_pool.shape[0]
+    qmax = kv_quant_qmax(k_pool.dtype)
+    pids = jnp.where(valid != 0, page_ids, n_pages)      # OOB -> dropped
+    new_k_scale, new_v_scale = updated_page_scales(
+        k_scale, v_scale, k_new, v_new, pids, qmax)
+
+    gidx = jnp.clip(pids, 0, n_pages - 1)
+
+    def ratio(old, new):
+        o, n = old[gidx], new[gidx]
+        r = jnp.where(n > 0, o / jnp.where(n > 0, n, 1.0), 0.0)
+        return r[:, None, :]        # broadcast over the page-slot axis
+
+    k_pages = requant_payload(k_pool[gidx], ratio(k_scale, new_k_scale),
+                              k_pool.dtype)
+    v_pages = requant_payload(v_pool[gidx], ratio(v_scale, new_v_scale),
+                              v_pool.dtype)
+    k_pool = k_pool.at[pids].set(k_pages, mode="drop")
+    v_pool = v_pool.at[pids].set(v_pages, mode="drop")
+
+    qk = quantize_rows(k_new, new_k_scale[gidx], k_pool.dtype)
+    qv = quantize_rows(v_new, new_v_scale[gidx], v_pool.dtype)
+    k_pool = k_pool.at[pids, offsets].set(qk, mode="drop")
+    v_pool = v_pool.at[pids, offsets].set(qv, mode="drop")
+    return k_pool, v_pool, new_k_scale, new_v_scale
+
+
+def dequant_gathered(pages, scale_pages):
+    """Dequantize a block-table gather of quantized pages.
+
+    pages: (..., n_sel, page, Hkv, hd) quantized; scale_pages:
+    (..., n_sel, Hkv) f32. Returns f32 with the per-(page, head) scale
+    broadcast over page slots and the head dim."""
+    return pages.astype(jnp.float32) * scale_pages[..., None, :, None]
+
+
+def paged_attention_quant_ref(q, kv_pages_k, kv_pages_v, k_scale, v_scale,
+                              block_tables, ctx_lens, *, softcap=None,
+                              scale=None, window=None):
+    """paged_attention_ref over quantized pools: gather pages AND their
+    scales through the block table, dequantize in f32, same math."""
+    k = dequant_gathered(kv_pages_k[block_tables], k_scale[block_tables])
+    v = dequant_gathered(kv_pages_v[block_tables], v_scale[block_tables])
+    B = q.shape[0]
+    Hkv, hd = kv_pages_k.shape[2], kv_pages_k.shape[3]
+    S = block_tables.shape[1] * kv_pages_k.shape[1]
+    return paged_attention_ref(q, None, None, block_tables, ctx_lens,
+                               softcap=softcap, scale=scale, window=window,
+                               _k=k.reshape(B, S, Hkv, hd),
+                               _v=v.reshape(B, S, Hkv, hd))
+
+
+def ragged_paged_attention_quant_ref(q, kv_pages_k, kv_pages_v, k_scale,
+                                     v_scale, block_tables, tok_seq,
+                                     tok_pos, *, softcap=None, scale=None,
+                                     window=None):
+    """ragged_paged_attention_ref over quantized pools (see above)."""
+    bt = block_tables[tok_seq]
+    k = dequant_gathered(kv_pages_k[bt], k_scale[bt])
+    v = dequant_gathered(kv_pages_v[bt], v_scale[bt])
+    N = q.shape[0]
+    Hkv, hd = kv_pages_k.shape[2], kv_pages_k.shape[3]
+    S = block_tables.shape[1] * kv_pages_k.shape[1]
+    return ragged_paged_attention_ref(
+        q, None, None, block_tables, tok_seq, tok_pos, softcap=softcap,
+        scale=scale, window=window,
+        _k=k.reshape(N, S, Hkv, hd), _v=v.reshape(N, S, Hkv, hd))
 
 
 def swap_pack_ref(pool, page_ids):

@@ -35,23 +35,26 @@ def _pack_kernel(page_ids, src_ref, dst_ref):
 def swap_pack(pool, page_ids, *, interpret=None):
     """Gather pool pages into a contiguous staging buffer.
 
-    pool: (n_pages, page, Hkv, hd); page_ids: (n,) int32 -> (n, page, Hkv, hd).
+    pool: (n_pages, ...) page-major, any trailing rank — the KV payload's
+    (n_pages, page, Hkv, hd) and a quantized pool's per-page scale leaf
+    (n_pages, Hkv) go through the same gather, so one slab carries both;
+    page_ids: (n,) int32 -> (n, ...).
     """
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     n = page_ids.shape[0]
-    _, page, Hkv, hd = pool.shape
+    rest = pool.shape[1:]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(n,),
-        in_specs=[pl.BlockSpec((1, page, Hkv, hd),
-                               lambda i, ids: (ids[i], 0, 0, 0))],
-        out_specs=pl.BlockSpec((1, page, Hkv, hd),
-                               lambda i, ids: (i, 0, 0, 0)),
+        in_specs=[pl.BlockSpec((1,) + rest,
+                               lambda i, ids: (ids[i],) + (0,) * len(rest))],
+        out_specs=pl.BlockSpec((1,) + rest,
+                               lambda i, ids: (i,) + (0,) * len(rest)),
     )
     return pl.pallas_call(
         _pack_kernel, grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((n, page, Hkv, hd), pool.dtype),
+        out_shape=jax.ShapeDtypeStruct((n,) + rest, pool.dtype),
         interpret=interpret,
     )(page_ids, pool)
 
@@ -71,23 +74,24 @@ _DONATE_POOL = () if jax.default_backend() == "cpu" else (0,)
 def swap_unpack(pool, staging, page_ids, *, interpret=None):
     """Scatter a staged buffer back into pool pages (returns updated pool).
 
-    pool: (n_pages, page, Hkv, hd); staging: (n, page, Hkv, hd);
-    page_ids: (n,) int32. The pool is aliased to the output, so only the
-    targeted pages are rewritten.
+    pool: (n_pages, ...) page-major, any trailing rank (payload or scale
+    leaf — see swap_pack); staging: (n, ...); page_ids: (n,) int32. The
+    pool is aliased to the output, so only the targeted pages are
+    rewritten.
     """
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     n = page_ids.shape[0]
-    _, page, Hkv, hd = pool.shape
+    rest = pool.shape[1:]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(n,),
-        in_specs=[pl.BlockSpec((1, page, Hkv, hd),
-                               lambda i, ids: (ids[i], 0, 0, 0)),
-                  pl.BlockSpec((1, page, Hkv, hd),
-                               lambda i, ids: (i, 0, 0, 0))],
-        out_specs=pl.BlockSpec((1, page, Hkv, hd),
-                               lambda i, ids: (ids[i], 0, 0, 0)),
+        in_specs=[pl.BlockSpec((1,) + rest,
+                               lambda i, ids: (ids[i],) + (0,) * len(rest)),
+                  pl.BlockSpec((1,) + rest,
+                               lambda i, ids: (i,) + (0,) * len(rest))],
+        out_specs=pl.BlockSpec((1,) + rest,
+                               lambda i, ids: (ids[i],) + (0,) * len(rest)),
     )
     return pl.pallas_call(
         _unpack_kernel, grid_spec=grid_spec,

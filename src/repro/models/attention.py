@@ -427,21 +427,44 @@ def gqa_decode_paged(p, a: AttentionCfg, x, pool, block_tables, ctx_lens, *,
     pids = block_tables[bidx, pos // page]
     offs = pos % page
     G = a.n_heads // Hkv
+    quant = "k_scale" in pool            # quantized pool (DESIGN.md §17)
     use_pallas = _paged_use_pallas() and discard_pid is not None
-    if use_pallas:
-        pids = jnp.where(valid, pids, discard_pid)
-    k_pool, v_pool = kv_append_op(
-        pool["k"], pool["v"], k, v, pids.astype(jnp.int32),
-        offs.astype(jnp.int32), valid.astype(jnp.int32),
-        use_pallas=use_pallas)
+    if quant:
+        from repro.kernels.ops import kv_append_quant_op
+        k_pool, v_pool, k_scale, v_scale = kv_append_quant_op(
+            pool["k"], pool["v"], pool["k_scale"], pool["v_scale"], k, v,
+            pids.astype(jnp.int32), offs.astype(jnp.int32),
+            valid.astype(jnp.int32), discard_pid=discard_pid,
+            use_pallas=use_pallas)
+        new_pool = {"k": k_pool, "v": v_pool,
+                    "k_scale": k_scale, "v_scale": v_scale}
+    else:
+        k_scale = v_scale = None
+        if use_pallas:
+            pids = jnp.where(valid, pids, discard_pid)
+        k_pool, v_pool = kv_append_op(
+            pool["k"], pool["v"], k, v, pids.astype(jnp.int32),
+            offs.astype(jnp.int32), valid.astype(jnp.int32),
+            use_pallas=use_pallas)
+        new_pool = {"k": k_pool, "v": v_pool}
     if _paged_use_pallas():
         out = paged_attention_op(q.reshape(B, Hkv, G, hd), k_pool, v_pool,
                                  block_tables, ctx_lens,
+                                 k_scale=k_scale, v_scale=v_scale,
                                  softcap=a.logit_softcap, window=window,
                                  use_pallas=True)
     else:
-        k_cache = k_pool[block_tables].reshape(B, S, Hkv, hd)
-        v_cache = v_pool[block_tables].reshape(B, S, Hkv, hd)
+        if quant:
+            from repro.kernels.ref import dequant_gathered
+            k_cache = dequant_gathered(
+                k_pool[block_tables],
+                k_scale[block_tables]).reshape(B, S, Hkv, hd)
+            v_cache = dequant_gathered(
+                v_pool[block_tables],
+                v_scale[block_tables]).reshape(B, S, Hkv, hd)
+        else:
+            k_cache = k_pool[block_tables].reshape(B, S, Hkv, hd)
+            v_cache = v_pool[block_tables].reshape(B, S, Hkv, hd)
         qh = q.reshape(B, Hkv, G, hd).astype(jnp.float32)
         s = jnp.einsum("bhgk,bshk->bhgs", qh,
                        k_cache.astype(jnp.float32)) / math.sqrt(hd)
@@ -455,8 +478,7 @@ def gqa_decode_paged(p, a: AttentionCfg, x, pool, block_tables, ctx_lens, *,
         w = jax.nn.softmax(s, axis=-1)
         out = jnp.einsum("bhgs,bshk->bhgk", w, v_cache.astype(jnp.float32))
     out = out.reshape(B, a.n_heads, hd).astype(x.dtype)
-    return jnp.einsum("bhk,hkd->bd", out, p["wo"]), {"k": k_pool,
-                                                     "v": v_pool}
+    return jnp.einsum("bhk,hkd->bd", out, p["wo"]), new_pool
 
 
 def gqa_extend_paged(p, a: AttentionCfg, x, pool, block_tables, start,
@@ -481,21 +503,44 @@ def gqa_extend_paged(p, a: AttentionCfg, x, pool, block_tables, start,
     t_valid = (jnp.arange(T)[None, :] < n_new[:, None])
     pids = jnp.take_along_axis(block_tables, positions // page, axis=1)
     offs = positions % page
+    quant = "k_scale" in pool            # quantized pool (DESIGN.md §17)
     use_pallas = _paged_use_pallas() and discard_pid is not None
-    if use_pallas:
-        pids = jnp.where(t_valid, pids, discard_pid)
-    k_pool, v_pool = kv_append_op(
-        pool["k"], pool["v"],
-        k.reshape(B * T, Hkv, hd), v.reshape(B * T, Hkv, hd),
-        pids.reshape(-1).astype(jnp.int32),
-        offs.reshape(-1).astype(jnp.int32),
-        t_valid.reshape(-1).astype(jnp.int32), use_pallas=use_pallas)
+    if quant:
+        from repro.kernels.ops import kv_append_quant_op
+        from repro.kernels.ref import dequant_gathered
+        k_pool, v_pool, k_scale, v_scale = kv_append_quant_op(
+            pool["k"], pool["v"], pool["k_scale"], pool["v_scale"],
+            k.reshape(B * T, Hkv, hd), v.reshape(B * T, Hkv, hd),
+            pids.reshape(-1).astype(jnp.int32),
+            offs.reshape(-1).astype(jnp.int32),
+            t_valid.reshape(-1).astype(jnp.int32),
+            discard_pid=discard_pid, use_pallas=use_pallas)
+        new_pool = {"k": k_pool, "v": v_pool,
+                    "k_scale": k_scale, "v_scale": v_scale}
+    else:
+        if use_pallas:
+            pids = jnp.where(t_valid, pids, discard_pid)
+        k_pool, v_pool = kv_append_op(
+            pool["k"], pool["v"],
+            k.reshape(B * T, Hkv, hd), v.reshape(B * T, Hkv, hd),
+            pids.reshape(-1).astype(jnp.int32),
+            offs.reshape(-1).astype(jnp.int32),
+            t_valid.reshape(-1).astype(jnp.int32), use_pallas=use_pallas)
+        new_pool = {"k": k_pool, "v": v_pool}
 
     # ragged-query attention over the pool; the gather-by-block-table is
     # XLA's lowering (a fused ragged-prefill kernel is future work — the
     # per-generated-token hot path is the decode kernel above)
-    k_cache = k_pool[block_tables].reshape(B, S, Hkv, hd)
-    v_cache = v_pool[block_tables].reshape(B, S, Hkv, hd)
+    if quant:
+        k_cache = dequant_gathered(
+            k_pool[block_tables],
+            k_scale[block_tables]).reshape(B, S, Hkv, hd)
+        v_cache = dequant_gathered(
+            v_pool[block_tables],
+            v_scale[block_tables]).reshape(B, S, Hkv, hd)
+    else:
+        k_cache = k_pool[block_tables].reshape(B, S, Hkv, hd)
+        v_cache = v_pool[block_tables].reshape(B, S, Hkv, hd)
     G = a.n_heads // Hkv
     qh = q.reshape(B, T, Hkv, G, hd).astype(jnp.float32)
     s = jnp.einsum("bthgk,bshk->bhgts", qh,
@@ -511,8 +556,7 @@ def gqa_extend_paged(p, a: AttentionCfg, x, pool, block_tables, start,
     w = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgts,bshk->bthgk", w, v_cache.astype(jnp.float32))
     out = out.reshape(B, T, a.n_heads, hd).astype(x.dtype)
-    return jnp.einsum("bthk,hkd->btd", out, p["wo"]), {"k": k_pool,
-                                                       "v": v_pool}
+    return jnp.einsum("bthk,hkd->btd", out, p["wo"]), new_pool
 
 
 def mla_decode_paged(p, a: AttentionCfg, x, pool, block_tables, ctx_lens, *,
@@ -643,21 +687,42 @@ def gqa_mixed_paged(p, a: AttentionCfg, x, pool, block_tables, tok_seq,
     pids = jnp.take_along_axis(bt_tok, (pos // page)[:, None], axis=1)[:, 0]
     offs = pos % page
     G = a.n_heads // Hkv
+    quant = "k_scale" in pool            # quantized pool (DESIGN.md §17)
     use_pallas = _paged_use_pallas() and discard_pid is not None
-    if use_pallas:
-        pids = jnp.where(valid, pids, discard_pid)
-    k_pool, v_pool = kv_append_op(
-        pool["k"], pool["v"], k, v, pids.astype(jnp.int32),
-        offs.astype(jnp.int32), valid.astype(jnp.int32),
-        use_pallas=use_pallas)
+    if quant:
+        from repro.kernels.ops import kv_append_quant_op
+        k_pool, v_pool, k_scale, v_scale = kv_append_quant_op(
+            pool["k"], pool["v"], pool["k_scale"], pool["v_scale"], k, v,
+            pids.astype(jnp.int32), offs.astype(jnp.int32),
+            valid.astype(jnp.int32), discard_pid=discard_pid,
+            use_pallas=use_pallas)
+        new_pool = {"k": k_pool, "v": v_pool,
+                    "k_scale": k_scale, "v_scale": v_scale}
+    else:
+        k_scale = v_scale = None
+        if use_pallas:
+            pids = jnp.where(valid, pids, discard_pid)
+        k_pool, v_pool = kv_append_op(
+            pool["k"], pool["v"], k, v, pids.astype(jnp.int32),
+            offs.astype(jnp.int32), valid.astype(jnp.int32),
+            use_pallas=use_pallas)
+        new_pool = {"k": k_pool, "v": v_pool}
     if _paged_use_pallas():
         out = ragged_paged_attention_op(
             q.reshape(N, Hkv, G, hd), k_pool, v_pool, block_tables,
             tok_seq.astype(jnp.int32), tok_pos.astype(jnp.int32),
+            k_scale=k_scale, v_scale=v_scale,
             softcap=a.logit_softcap, window=window, use_pallas=True)
     else:
-        k_cache = k_pool[bt_tok].reshape(N, S, Hkv, hd)
-        v_cache = v_pool[bt_tok].reshape(N, S, Hkv, hd)
+        if quant:
+            from repro.kernels.ref import dequant_gathered
+            k_cache = dequant_gathered(
+                k_pool[bt_tok], k_scale[bt_tok]).reshape(N, S, Hkv, hd)
+            v_cache = dequant_gathered(
+                v_pool[bt_tok], v_scale[bt_tok]).reshape(N, S, Hkv, hd)
+        else:
+            k_cache = k_pool[bt_tok].reshape(N, S, Hkv, hd)
+            v_cache = v_pool[bt_tok].reshape(N, S, Hkv, hd)
         qh = q.reshape(N, Hkv, G, hd).astype(jnp.float32)
         s = jnp.einsum("bhgk,bshk->bhgs", qh,
                        k_cache.astype(jnp.float32)) / math.sqrt(hd)
@@ -671,8 +736,7 @@ def gqa_mixed_paged(p, a: AttentionCfg, x, pool, block_tables, tok_seq,
         w = jax.nn.softmax(s, axis=-1)
         out = jnp.einsum("bhgs,bshk->bhgk", w, v_cache.astype(jnp.float32))
     out = out.reshape(N, a.n_heads, hd).astype(x.dtype)
-    return jnp.einsum("bhk,hkd->bd", out, p["wo"]), {"k": k_pool,
-                                                     "v": v_pool}
+    return jnp.einsum("bhk,hkd->bd", out, p["wo"]), new_pool
 
 
 def mla_mixed_paged(p, a: AttentionCfg, x, pool, block_tables, tok_seq,
@@ -846,10 +910,27 @@ def attention_decode(p, a, x, cache, pos, *, window_override="cfg",
     return fn(p, a, x, cache, pos, window_override=window_override)
 
 
-def init_cache_shapes(a: AttentionCfg, batch: int, max_len: int, dtype):
-    """Zeroed decode cache for one attention block."""
+def init_cache_shapes(a: AttentionCfg, batch: int, max_len: int, dtype,
+                      kv_dtype=None):
+    """Zeroed decode cache for one attention block.
+
+    ``kv_dtype`` (a name from repro.kernels.kv_quant.KV_QUANT_DTYPES)
+    stores GQA K/V low-bit with one fp32 scale per (page, kv head) in the
+    same dict — for paged pools, where ``batch`` is the page count and
+    ``max_len`` the page size (DESIGN.md §17). MLA latent pools have no
+    quantized kernel yet and stay in ``dtype`` (same standing gap as the
+    MLA paged-decode kernel in ROADMAP.md)."""
     if a.kind == "mla":
         return {"c": jnp.zeros((batch, max_len, a.kv_lora_rank), dtype),
                 "kr": jnp.zeros((batch, max_len, a.qk_rope_head_dim), dtype)}
+    if kv_dtype is not None:
+        from repro.kernels.kv_quant import kv_quant_jnp_dtype
+        qd = kv_quant_jnp_dtype(kv_dtype)
+        return {"k": jnp.zeros((batch, max_len, a.n_kv_heads, a.head_dim),
+                               qd),
+                "v": jnp.zeros((batch, max_len, a.n_kv_heads, a.head_dim),
+                               qd),
+                "k_scale": jnp.zeros((batch, a.n_kv_heads), jnp.float32),
+                "v_scale": jnp.zeros((batch, a.n_kv_heads), jnp.float32)}
     return {"k": jnp.zeros((batch, max_len, a.n_kv_heads, a.head_dim), dtype),
             "v": jnp.zeros((batch, max_len, a.n_kv_heads, a.head_dim), dtype)}

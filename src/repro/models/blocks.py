@@ -206,13 +206,16 @@ def block_extend(p, cfg: ModelConfig, blk: BlockCfg, x, cache, ctx):
 
 
 def init_block_cache(cfg: ModelConfig, blk: BlockCfg, batch: int,
-                     cache_len: int, dtype, window_override="cfg"):
-    """Zeroed decode cache/state for one block."""
+                     cache_len: int, dtype, window_override="cfg",
+                     kv_dtype=None):
+    """Zeroed decode cache/state for one block. ``kv_dtype`` stores GQA
+    K/V low-bit with per-page scales (paged pools only; DESIGN.md §17)."""
     if blk.kind in ("attn", "shared_attn"):
         a = blk.attn
         window = attention.effective_window(a, window_override)
         n = cache_len if window is None else min(cache_len, window)
-        return attention.init_cache_shapes(a, batch, n, dtype)
+        return attention.init_cache_shapes(a, batch, n, dtype,
+                                           kv_dtype=kv_dtype)
     shapes = {"mamba2": ssm.mamba2_state_shapes, "mlstm": ssm.mlstm_state_shapes,
               "slstm": ssm.slstm_state_shapes}[blk.kind]
     return shapes(blk.ssm, cfg.d_model, batch, dtype)

@@ -255,7 +255,7 @@ class LM:
     # Decode
     # ------------------------------------------------------------------
     def init_cache(self, batch: int, cache_len: int, *, dtype=None,
-                   window_override="cfg"):
+                   window_override="cfg", kv_dtype=None):
         cfg = self.cfg
         dtype = jnp.dtype(dtype or cfg.dtype)
         out = []
@@ -263,7 +263,8 @@ class LM:
             entry = {}
             for j, blk in enumerate(g.period):
                 tmpl = B.init_block_cache(cfg, blk, batch, cache_len, dtype,
-                                          window_override)
+                                          window_override,
+                                          kv_dtype=kv_dtype)
                 entry[f"b{j}"] = jax.tree.map(
                     lambda z: jnp.broadcast_to(
                         z, (g.n_periods,) + z.shape).copy(), tmpl)

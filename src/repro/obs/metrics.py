@@ -51,6 +51,10 @@ ENGINE_COUNTER_SCHEMA: Dict[str, float] = {
     "spec_grafted_tokens": 0,
     "tool_faults": 0, "tool_retries": 0, "tool_timeouts": 0,
     "sessions_cancelled": 0, "sessions_failed": 0, "sessions_rejected": 0,
+    # quantized KV pools (DESIGN.md §17): pages whose scales were zeroed
+    # at free time (scale lifetime == page lifetime) and shared pages
+    # whose scales were copied by a COW fork alongside the payload
+    "kv_quant_scale_reset_pages": 0, "kv_quant_scale_cow_pages": 0,
 }
 
 SCHED_COUNTER_SCHEMA: Tuple[str, ...] = (

@@ -223,19 +223,45 @@ class Engine:
                  max_queued: Optional[int] = None,
                  tracer: Optional[SpanTracer] = None,
                  sanitize: bool = False,
+                 kv_dtype: Optional[str] = None,
                  dtype=jnp.float32):
         for blk in cfg.blocks:
             assert blk.kind in ("attn", "shared_attn"), \
                 "paged engine serves attention-cache architectures"
+        # quantized KV pools (DESIGN.md §17): low-bit payload + per-page
+        # fp32 scales owned by the same BlockManager pages. Only the
+        # paged path can host them — the gather/scatter oracle
+        # round-trips pools through a slotted (periods, B, S, ...) view
+        # that has no slot axis for a scale leaf.
+        if kv_dtype is not None:
+            from repro.kernels.kv_quant import KV_QUANT_DTYPES
+            if kv_dtype not in KV_QUANT_DTYPES:
+                raise ValueError(
+                    f"unsupported kv_dtype {kv_dtype!r}; "
+                    f"choose from {sorted(KV_QUANT_DTYPES)}")
+            if not paged:
+                raise ValueError("kv_dtype requires the paged engine "
+                                 "(paged=True)")
+        self.kv_dtype = kv_dtype
         self.cfg = cfg
         self.model = LM(cfg)
         self.params = self.model.init(jax.random.PRNGKey(seed), dtype=dtype)
         self.page = page_size
         # fixed per-request page-table width -> stable jit shapes
         self.max_pages = -(-max_model_len // page_size)
-        self.pools = self.model.init_cache(n_pages, page_size, dtype=dtype)
+        self.pools = self.model.init_cache(n_pages, page_size, dtype=dtype,
+                                           kv_dtype=kv_dtype)
         self.blocks = BlockManager(n_pages, page_size)
         self.scratch_page = self.blocks.allocate(1)[0]  # dummy-slot target
+        # scale lifetime == page lifetime: zero a page's scales the
+        # moment its refcount drops to 0, so a recycled page can never
+        # inherit its prior occupant's (coarser) scale and the sanitizer
+        # can audit "freed => zero scales" as an invariant. Installed
+        # INNERMOST — the sanitizer's own free wrap (below) filters
+        # double-frees before they reach this one, and the prefix cache
+        # captures the fully wrapped chain as its release callback.
+        if kv_dtype is not None:
+            self._wrap_free_for_quant()
         # invariant enforcement (DESIGN.md §16): attached only under
         # sanitize=True so the default path stays allocation-free (the
         # NullTracer discipline). Created BEFORE the prefix cache below —
@@ -249,7 +275,8 @@ class Engine:
             from repro.analysis.ownership import KVSanitizer
             self.sanitizer = KVSanitizer(self)
             self._lifecycle_checker = LifecycleChecker()
-        self.cost = CostModel(cfg=cfg, chip=TPU_V5E, n_chips=1)
+        self.cost = CostModel(cfg=cfg, chip=TPU_V5E, n_chips=1,
+                              kv_dtype=kv_dtype)
         cap = max(page_size, (n_pages - 8) * page_size)
         # telemetry (DESIGN.md §13): one registry spans engine + scheduler
         # + ledger; the tracer defaults to the allocation-free NullTracer
@@ -396,11 +423,15 @@ class Engine:
         # (queued after admission / swapped_wait after a swap-out resume);
         # closed into a span + wait histogram at its next compute
         self._wait_marks: Dict[int, Tuple[float, str]] = {}
-        # bytes one token position occupies across every layer's pool
-        self.kv_token_bytes = int(sum(
-            leaf.dtype.itemsize * leaf.shape[0]
-            * int(np.prod(leaf.shape[3:], dtype=np.int64))
-            for leaf in jax.tree.leaves(self.pools)))
+        # bytes one token position occupies across every layer's pool —
+        # the pools' total physical bytes amortized per page slot, so a
+        # quantized pool's per-page scale leaves are priced in (ceil; for
+        # kv_dtype=None every leaf divides exactly and this equals the
+        # old itemsize * periods * prod(trailing) sum bit-for-bit)
+        page_slots = n_pages * page_size
+        self.kv_token_bytes = -(-int(sum(
+            int(leaf.nbytes) for leaf in jax.tree.leaves(self.pools)))
+            // page_slots)
         # MLA blocks have no paged decode kernel: their latent pools are
         # gathered O(context) per step on every backend, and the counters
         # must say so (GQA-only models: 0, paged decode is truly O(1))
@@ -408,10 +439,10 @@ class Engine:
         for gi, g in enumerate(cfg.groups):
             for j, blk in enumerate(g.period):
                 if blk.attn is not None and blk.attn.kind == "mla":
-                    self.kv_mla_token_bytes += int(sum(
-                        leaf.dtype.itemsize * leaf.shape[0]
-                        * int(np.prod(leaf.shape[3:], dtype=np.int64))
-                        for leaf in jax.tree.leaves(self.pools[gi][f"b{j}"])))
+                    self.kv_mla_token_bytes += -(-int(sum(
+                        int(leaf.nbytes) for leaf in
+                        jax.tree.leaves(self.pools[gi][f"b{j}"])))
+                        // page_slots)
         # jitted entry points (stable shapes via bucketing); pools are
         # donated on accelerators so the paged update is truly in place
         donate = () if jax.default_backend() == "cpu" else (3,)
@@ -1069,6 +1100,10 @@ class Engine:
                 lambda leaf: leaf.at[:, dst].set(jnp.take(leaf, src, axis=1)),
                 self.pools)
             self.counters["cow_bytes"] += self.page * self.kv_token_bytes
+            if self.kv_dtype is not None:
+                # the tree.map above copied k_scale/v_scale rows too —
+                # scales travel with the payload on every fork
+                self.counters["kv_quant_scale_cow_pages"] += 1
         st.pages[pidx] = ("dev", new)
         return True
 
@@ -1077,6 +1112,56 @@ class Engine:
         # planned work once _back_plan has pre-flighted the plan
         if not self._try_ensure_writable(st, pos):
             raise RuntimeError("out of KV pages during copy-on-write")
+
+    # ------------------------------------------------------------------
+    # quantized pools: scale lifetime == page lifetime (DESIGN.md §17)
+    # ------------------------------------------------------------------
+    def _wrap_free_for_quant(self) -> None:
+        """Chain onto ``blocks.free``: zero the scales of every page whose
+        refcount drops to 0. Eager (at free time, not realloc time) so the
+        ordering is safe by construction — swap-out packs its slab before
+        freeing, and COW / swap-in allocate an already-zeroed page and
+        then overwrite payload + scales together."""
+        inner = self.blocks.free
+
+        def free(pages) -> None:
+            recycled = [int(p) for p in pages
+                        if self.blocks.ref_count(p) == 1]
+            inner(pages)
+            if recycled:
+                self._zero_page_scales(recycled)
+
+        self.blocks.free = free
+
+    def _zero_page_scales(self, pages: List[int]) -> None:
+        ids = jnp.asarray(pages, jnp.int32)
+        pools = []
+        for entry in self.pools:
+            new_entry = {}
+            for bk, pool in entry.items():
+                if isinstance(pool, dict) and "k_scale" in pool:
+                    pool = dict(pool)
+                    pool["k_scale"] = pool["k_scale"].at[:, ids].set(0.0)
+                    pool["v_scale"] = pool["v_scale"].at[:, ids].set(0.0)
+                new_entry[bk] = pool
+            pools.append(new_entry)
+        self.pools = tuple(pools)
+        self.counters["kv_quant_scale_reset_pages"] += len(pages)
+
+    def _stale_scale_pages(self) -> List[int]:
+        """Pages violating the freed => zero-scales invariant (the
+        sanitizer's per-page scale-ownership audit reads this)."""
+        if self.kv_dtype is None:
+            return []
+        mx = np.zeros(self.blocks.n_pages, np.float32)
+        for entry in self.pools:
+            for pool in entry.values():
+                if isinstance(pool, dict) and "k_scale" in pool:
+                    for skey in ("k_scale", "v_scale"):
+                        leaf = np.abs(np.asarray(pool[skey], np.float32))
+                        mx = np.maximum(mx, leaf.max(axis=(0, 2)))
+        return [p for p in range(self.blocks.n_pages)
+                if self.blocks.ref_count(p) == 0 and mx[p] > 0.0]
 
     def _device_page_ids(self, st: ReqKV, n_pages: int) -> List[int]:
         ids = []
@@ -1738,6 +1823,8 @@ class Engine:
                     jnp.take(leaf, src, axis=1)),
                 self.pools)
             self.counters["cow_bytes"] += self.page * self.kv_token_bytes
+            if self.kv_dtype is not None:
+                self.counters["kv_quant_scale_cow_pages"] += 1
         st.pages[pidx] = ("dev", new)
         return True
 

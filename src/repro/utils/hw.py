@@ -49,4 +49,5 @@ CHIPS = {c.name: c for c in (TPU_V5E, A100)}
 
 def dtype_bytes(dtype: str) -> int:
     return {"bfloat16": 2, "float16": 2, "float32": 4, "int8": 1,
-            "float8_e4m3fn": 1, "int32": 4}[str(dtype)]
+            "float8_e4m3": 1, "float8_e4m3fn": 1, "float8_e5m2": 1,
+            "int32": 4}[str(dtype)]

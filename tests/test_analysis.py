@@ -139,6 +139,43 @@ def test_injected_unforked_cow_write_detected():
     assert str(cows[0].rid) == str(rid) or cows[0].rid is not None
 
 
+def test_injected_stale_scale_detected():
+    """Quantized pools (DESIGN.md §17): a freed-and-recyclable page whose
+    per-page quantization scales were NOT zeroed is corruption — the next
+    occupant would quantize against the previous occupant's dynamic
+    range. Inject exactly that and the audit must classify it."""
+    eng = _engine(sanitize=True, kv_dtype="int8")
+    _run_some(eng)
+    eng.sanitizer.audit("pre-inject")
+    assert eng.sanitizer.findings == []          # clean run, clean report
+    pid = next(p for p in range(eng.blocks.n_pages)
+               if eng.blocks.ref_count(p) == 0)
+    pools = []                                   # resurrect a stale scale
+    for entry in eng.pools:
+        new_entry = {}
+        for bk, pool in entry.items():
+            if isinstance(pool, dict) and "k_scale" in pool:
+                pool = dict(pool)
+                pool["k_scale"] = pool["k_scale"].at[:, pid].set(0.25)
+            new_entry[bk] = pool
+        pools.append(new_entry)
+    eng.pools = tuple(pools)
+    eng.sanitizer.audit("test-inject")
+    stale = [f for f in eng.sanitizer.findings if f.kind == "stale_scale"]
+    assert stale and stale[0].page == pid
+    assert stale[0].site == "test-inject"
+    assert "scale" in stale[0].detail
+
+
+def test_free_zeroes_scales_eagerly():
+    """The runtime invariant the audit checks: the moment a page's
+    refcount hits 0 its scale rows are zeroed (and counted)."""
+    eng = _engine(sanitize=True, kv_dtype="int8")
+    _run_some(eng)
+    assert eng.counters["kv_quant_scale_reset_pages"] > 0
+    assert eng._stale_scale_pages() == []
+
+
 def test_injected_illegal_phase_transition_raises():
     req = Request(rid=7, arrival=0.0, prompt_len=2,
                   segments=[Segment(4, None)], prompt_tokens=[1, 2])
@@ -167,10 +204,10 @@ def test_transition_table_shape():
 # ---------------------------------------------------------------------------
 
 def _soak(policy, *, fused=True, overlap=True, sanitize=False,
-          failure_rate=0.2, timeout_rate=0.1, n=6):
+          failure_rate=0.2, timeout_rate=0.1, n=6, **engine_kw):
     cfg = get_config("llama3.2-1b", tiny=True)
     eng = _engine(policy, cfg=cfg, fused=fused, overlap=overlap,
-                  sanitize=sanitize)
+                  sanitize=sanitize, **engine_kw)
     cl = InferCeptClient(eng)
     tools = ChaosToolExecutor(
         VirtualTimeToolExecutor(cfg.vocab_size, n_tokens=4, duration=0.05),
@@ -221,6 +258,14 @@ def test_sanitized_soak_unfused():
 @pytest.mark.slow
 def test_sanitized_soak_serial():
     _assert_sanitized_identity("infercept", overlap=False)
+
+
+def test_sanitized_soak_quantized():
+    """Quantized pools under chaos: sanitize=True stays observation-only
+    (identical streams/counters to sanitize=False at the same kv_dtype)
+    and the run — tool faults, retries, swap churn and all — produces
+    ZERO findings, including the per-page scale-ownership audit."""
+    _assert_sanitized_identity("infercept", kv_dtype="int8")
 
 
 def test_sanitized_simulator_runs_clean():

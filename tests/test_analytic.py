@@ -99,3 +99,39 @@ ENTRY %main (x: f32[8]) -> f32[8] {
     got = collective_bytes_from_hlo(hlo, loop_multiplier=10)
     assert got["all-reduce"] == 8 * 4 * 10   # inside the while body
     assert got["all-gather"] == 16 * 4       # top level: counted once
+
+
+# ---------------------------------------------------------------------------
+# kv-dtype-aware byte accounting (DESIGN.md §17)
+# ---------------------------------------------------------------------------
+
+def test_dtype_bytes_covers_quantized_kv_dtypes():
+    from repro.utils.hw import dtype_bytes
+    assert dtype_bytes("int8") == 1
+    assert dtype_bytes("float8_e4m3") == 1
+    assert dtype_bytes("float8_e5m2") == 1
+    assert dtype_bytes("bfloat16") == 2
+    assert dtype_bytes("float32") == 4
+
+
+def test_costmodel_kv_dtype_reprices_eq5_terms():
+    """kv_dtype is distinct from weight_dtype: M follows the KV storage
+    dtype while weight_bytes, FLOPs and S stay put — so every Eq. 4/5
+    pivot that prices byte movement shifts by exactly the dtype ratio."""
+    from repro.configs import get_config
+    from repro.core.costmodel import CostModel
+    from repro.utils.hw import A100
+    cfg = get_config("gpt-j-6b")
+    base = CostModel(cfg=cfg, chip=A100, n_chips=1)            # bf16 KV
+    for name in ("int8", "float8_e4m3", "float8_e5m2"):
+        q = CostModel(cfg=cfg, chip=A100, n_chips=1, kv_dtype=name)
+        assert q.m_bytes * 2 == base.m_bytes
+        assert q.weight_bytes == base.weight_bytes             # weights bf16
+        assert q.saturation_tokens == base.saturation_tokens
+        assert q.t_swap(4096) * 2 == pytest.approx(base.t_swap(4096))
+        assert abs(q.swap_tokens_within(0.02)
+                   - 2 * base.swap_tokens_within(0.02)) <= 1  # int floor
+        assert q.kv_capacity_tokens() >= 2 * base.kv_capacity_tokens()
+    # None preserves the historical weight_dtype-priced M bit-for-bit
+    assert CostModel(cfg=cfg, chip=A100, n_chips=1,
+                     kv_dtype=None).m_bytes == base.m_bytes

@@ -267,7 +267,8 @@ def test_kv_append_invalid_rows_leave_pool_untouched():
     assert jnp.array_equal(got_k, kp) and jnp.array_equal(got_v, vp)
 
 
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int8])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int8,
+                                   jnp.float8_e4m3fn, jnp.float8_e5m2])
 @pytest.mark.parametrize("n_move", [1, 5, 16])
 def test_swap_pack_unpack_roundtrip(dtype, n_move):
     rng = np.random.default_rng(n_move)
@@ -281,6 +282,28 @@ def test_swap_pack_unpack_roundtrip(dtype, n_move):
         pool, jnp.zeros_like(staged), ids))
     restored = swap_unpack(zeroed, staged, ids, interpret=True)
     assert jnp.array_equal(restored, pool)
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "float8_e4m3",
+                                      "float8_e5m2"])
+def test_swap_roundtrip_quantized_slab(kv_dtype):
+    """A quantized pool's slab is TWO leaves — low-bit payload
+    (n_pages, page, Hkv, hd) and fp32 scales (n_pages, Hkv) — packed by
+    the same rank-generic kernel in one contiguous DMA. Both roundtrip
+    bit-exactly (DESIGN.md §17)."""
+    from repro.kernels.kv_quant import kv_quant_jnp_dtype
+    rng = np.random.default_rng(3)
+    qd = kv_quant_jnp_dtype(kv_dtype)
+    payload = jnp.asarray(rng.normal(size=(24, 8, 2, 16)) * 5).astype(qd)
+    scales = jnp.asarray(rng.uniform(0, 0.1, (24, 2)), jnp.float32)
+    ids = jnp.asarray(rng.choice(24, 7, replace=False), jnp.int32)
+    for pool in (payload, scales):
+        staged = swap_pack(pool, ids, interpret=True)
+        assert jnp.array_equal(staged, pool[ids])
+        clobbered = swap_unpack(pool, jnp.zeros_like(staged), ids,
+                                interpret=True)
+        restored = swap_unpack(clobbered, staged, ids, interpret=True)
+        assert jnp.array_equal(restored, pool)
 
 
 @pytest.mark.parametrize("B,H,T,dk,dv,c", [
@@ -318,25 +341,44 @@ if HAVE_HYPOTHESIS:
         shape=hyp_st.sampled_from([(12, 4, 1, 8), (24, 8, 2, 16)]),
         seed=hyp_st.integers(0, 2**16 - 1),
         frac=hyp_st.floats(0.05, 1.0),
+        kv_dtype=hyp_st.sampled_from([None, "int8", "float8_e4m3",
+                                      "float8_e5m2"]),
     )
-    def test_swap_roundtrip_property(shape, seed, frac):
+    def test_swap_roundtrip_property(shape, seed, frac, kv_dtype):
         """For ANY page subset: pack -> clobber -> unpack restores the pool
-        bit-exactly, and pages outside the subset are never touched."""
+        bit-exactly, and pages outside the subset are never touched.
+        Quantized slabs (DESIGN.md §17) carry a low-bit payload leaf plus
+        an fp32 (n_pages, Hkv) scale leaf through the SAME pack/unpack —
+        both must roundtrip exactly for every supported kv_dtype."""
+        from repro.kernels.kv_quant import kv_quant_jnp_dtype
         rng = np.random.default_rng(seed)
-        n_pages = shape[0]
+        n_pages, _, Hkv, _ = shape
         n_move = max(1, int(frac * n_pages))
-        pool = jnp.asarray(rng.normal(size=shape), jnp.float32)
+        payload = jnp.asarray(rng.normal(size=shape), jnp.float32)
+        leaves = [payload]
+        if kv_dtype is not None:
+            qd = kv_quant_jnp_dtype(kv_dtype)
+            leaves = [jnp.asarray(rng.normal(size=shape) * 5).astype(qd),
+                      jnp.asarray(rng.uniform(0, 0.1, (n_pages, Hkv)),
+                                  jnp.float32)]
         ids_np = rng.choice(n_pages, n_move, replace=False)
         ids = jnp.asarray(ids_np, jnp.int32)
-        staged = swap_pack(pool, ids, interpret=True)
-        assert jnp.array_equal(staged, pool[ids])
-        clobbered = swap_unpack(pool, jnp.zeros_like(staged), ids,
-                                interpret=True)
         untouched = np.setdiff1d(np.arange(n_pages), ids_np)
-        assert jnp.array_equal(clobbered[untouched], pool[untouched])
-        assert jnp.array_equal(clobbered[ids], jnp.zeros_like(staged))
-        restored = swap_unpack(clobbered, staged, ids, interpret=True)
-        assert jnp.array_equal(restored, pool)
+        for pool in leaves:
+            staged = swap_pack(pool, ids, interpret=True)
+            assert _bits_equal(staged, pool[ids])
+            clobbered = swap_unpack(pool, jnp.zeros_like(staged), ids,
+                                    interpret=True)
+            assert _bits_equal(clobbered[untouched], pool[untouched])
+            assert _bits_equal(clobbered[ids], jnp.zeros_like(staged))
+            restored = swap_unpack(clobbered, staged, ids, interpret=True)
+            assert _bits_equal(restored, pool)
+
+    def _bits_equal(a, b):
+        # fp8 NaN payloads (rng bytes cast through fp8) defeat ==; compare
+        # the raw storage bytes instead
+        return np.array_equal(np.asarray(a).view(np.uint8),
+                              np.asarray(b).view(np.uint8))
 else:                                                # pragma: no cover
     @pytest.mark.skip(reason="hypothesis not installed")
     def test_swap_roundtrip_property():

@@ -41,3 +41,16 @@ def test_pages_for_tokens():
     assert bm.pages_for_tokens(1) == 1
     assert bm.pages_for_tokens(16) == 1
     assert bm.pages_for_tokens(17) == 2
+
+
+def test_cfg_kv_token_bytes_scales_with_dtype_width():
+    """ModelConfig.kv_token_bytes is linear in the storage width — the
+    quantized-pool repricing (DESIGN.md §17) relies on exactly this."""
+    from repro.configs import get_config
+    from repro.utils.hw import dtype_bytes
+    for name in ("llama3.2-1b", "gpt-j-6b"):
+        cfg = get_config(name)
+        one = cfg.kv_token_bytes(dtype_bytes("int8"))
+        assert cfg.kv_token_bytes(dtype_bytes("bfloat16")) == 2 * one
+        assert cfg.kv_token_bytes(dtype_bytes("float32")) == 4 * one
+        assert cfg.kv_token_bytes(dtype_bytes("float8_e4m3")) == one
